@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows (derived is a
+compact json-ish summary of the paper-relevant quantities).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig
+from repro.fed.engine import EngineConfig, FederatedTrainer
+
+
+def row(name: str, us_per_call: float, derived: dict) -> str:
+    payload = json.dumps(derived, default=lambda x: round(float(x), 5)
+                         if isinstance(x, (np.floating, float)) else str(x))
+    return f"{name},{us_per_call:.1f},{payload}"
+
+
+def tiny_cfg(n_layers=2, d_model=64, vocab=256):
+    return get_config("llama-3.2-1b").reduced(n_layers=n_layers,
+                                              d_model=d_model, vocab=vocab)
+
+
+def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
+                 local_steps=1, batch=2, preference=None, seed=0,
+                 heterogeneous_rms=False, dirichlet_alpha=0.3,
+                 cfg=None) -> FederatedTrainer:
+    cfg = cfg or tiny_cfg()
+    fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
+                    local_steps=local_steps, batch_size=batch, beta=beta,
+                    preference=preference)
+    ec = EngineConfig(algorithm=algorithm, max_new=8, prompt_len=4,
+                      seed=seed, heterogeneous_rms=heterogeneous_rms,
+                      dirichlet_alpha=dirichlet_alpha)
+    return FederatedTrainer(cfg, fc, ec)
+
+
+def timed_rounds(trainer, rounds: int):
+    t0 = time.time()
+    hist = trainer.run(rounds)
+    us = (time.time() - t0) / rounds * 1e6
+    return hist, us

@@ -1,0 +1,42 @@
+"""FedCMOO's compression trade-off (Askin et al.'s q-term, paper Rmk 4.6
+comparison): how far the server's lambda drifts from the exact solution as
+the gradient sketch rank shrinks — the error source FIRM eliminates by
+never transmitting gradients at all.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import fedcmoo, mgda
+
+
+def bench_fedcmoo_compression_error():
+    key = jax.random.PRNGKey(0)
+    d, m, n_clients = 100_000, 3, 4
+    t0 = time.time()
+    base = jax.random.normal(key, (m, d)) / np.sqrt(d)
+    clients = [base + 0.1 / np.sqrt(d) * jax.random.normal(
+        jax.random.fold_in(key, c), (m, d)) for c in range(n_clients)]
+    exact = fedcmoo.server_solve(clients, beta=0.0)
+    out = {"d": d, "exact_lambda": np.asarray(exact).tolist(), "vs_rank": {}}
+    for rank in (100, 1000, 10000):
+        errs = []
+        for s in range(5):
+            kk = jax.random.fold_in(key, 1000 + s)
+            sk = [fedcmoo.sketch(c, rank, kk) for c in clients]
+            lam = fedcmoo.server_solve(sk, beta=0.0)
+            errs.append(float(jnp.linalg.norm(lam - exact)))
+        out["vs_rank"][str(rank)] = float(np.mean(errs))
+    v = out["vs_rank"]
+    out["error_decreases_with_rank"] = bool(v["10000"] < v["100"])
+    out["firm_error"] = 0.0    # FIRM transmits no gradients: no q-term
+    us = (time.time() - t0) * 1e6 / 16
+    return row("fedcmoo_compression_q_term", us, out)
+
+
+ALL = [bench_fedcmoo_compression_error]

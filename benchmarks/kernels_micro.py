@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: wall time of the XLA twin paths on CPU plus
+oracle-agreement stats for the Pallas kernels (interpret mode).
+
+On CPU these numbers measure the *jnp fallback* (what the dry-run lowers);
+the Pallas kernels target TPU and are validated, not timed, here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.kernels import ops, ref
+from repro.models.attention import chunked_attention
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def bench_gram():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (3, 1 << 20))      # 3 x 1M-dim gradients
+    jitted = jax.jit(ref.gram)
+    us = _time(jitted, x)
+    err = float(jnp.abs(ops.gram(x) - ref.gram(x)).max())
+    return row("kernel_gram_3x1M", us,
+               {"pallas_interpret_max_abs_err": err,
+                "bytes_streamed_MB": x.size * 4 / 1e6})
+
+
+def bench_attention():
+    key = jax.random.PRNGKey(1)
+    b, s, hq, hkv, dh = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (b, s, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, dh))
+    fn = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                   block=256))
+    us = _time(fn, q, k, v)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=256,
+                              block_k=256)
+    err = float(jnp.abs(got - ref.flash_attention(q, k, v,
+                                                  causal=True)).max())
+    return row("kernel_flash_attention_1k", us,
+               {"pallas_interpret_max_abs_err": err,
+                "gqa_ratio": hq // hkv})
+
+
+def bench_rmsnorm():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4096, 2048))
+    g = jnp.ones((2048,))
+    fn = jax.jit(ref.rmsnorm)
+    us = _time(fn, x, g)
+    err = float(jnp.abs(ops.rmsnorm(x, g) - ref.rmsnorm(x, g)).max())
+    return row("kernel_rmsnorm_4096x2048", us,
+               {"pallas_interpret_max_abs_err": err})
+
+
+def bench_mgda_solver():
+    from repro.core import mgda
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (3, 5))
+    G = a @ a.T
+    fn = jax.jit(lambda G: mgda.solve_qp_pgd(G, iters=100))
+    us = _time(fn, G)
+    return row("mgda_qp_pgd_100iters_M3", us, {})
+
+
+ALL = [bench_gram, bench_attention, bench_rmsnorm, bench_mgda_solver]

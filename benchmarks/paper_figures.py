@@ -1,0 +1,139 @@
+"""One benchmark per paper figure/table (§5 + App. A), at CPU toy scale.
+
+Fig. 2  (RQ1): FIRM vs FedCMOO — rewards + lambda smoothness + comm bytes
+Fig. 3  (RQ2): beta=0 vs beta>0 — disagreement drift + rewards
+Fig. 4  (RQ3): preference sweep -> Pareto trade-off points
+Fig. 5/6     : homogeneous vs heterogeneous reward models
+Fig. 7 (A.2.2): client scaling (2 vs 4 clients here)
+Fig. 8 (A.2.3): M=3 objectives, FIRM vs FedCMOO
+Fig. 1 (comms): O(Cd) vs O(CMd) measured + analytic bytes
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_trainer, row, timed_rounds
+from repro.core import comms
+
+ROUNDS = 3
+
+
+def bench_rq1_firm_vs_fedcmoo():
+    out = {}
+    us = 0.0
+    for alg in ("firm", "fedcmoo"):
+        tr = make_trainer(alg, local_steps=2)
+        hist, us_ = timed_rounds(tr, ROUNDS)
+        us = max(us, us_)
+        lam_path = np.stack([h["lam_mean"] for h in hist])
+        out[alg] = {
+            "final_rewards": hist[-1]["rewards"].tolist(),
+            "lam_osc": float(np.abs(np.diff(lam_path[:, 0])).mean()),
+            "comm_MB": tr.ledger.total / 1e6,
+        }
+    out["comm_ratio_fedcmoo_over_firm"] = \
+        out["fedcmoo"]["comm_MB"] / out["firm"]["comm_MB"]
+    return row("fig2_rq1_firm_vs_fedcmoo", us, out)
+
+
+def bench_rq2_regularization():
+    out = {}
+    us = 0.0
+    for name, alg in (("beta_0.05", "firm"), ("beta_0", "firm_unreg")):
+        tr = make_trainer(alg, beta=0.05)
+        hist, us_ = timed_rounds(tr, ROUNDS)
+        us = max(us, us_)
+        out[name] = {
+            "lam_disagreement": float(np.mean(
+                [h["lam_disagreement"] for h in hist])),
+            "final_rewards": hist[-1]["rewards"].tolist(),
+        }
+    return row("fig3_rq2_regularization_ablation", us, out)
+
+
+def bench_rq3_preference_pareto():
+    points = []
+    us = 0.0
+    for p0 in (0.25, 1.0, 4.0):
+        tr = make_trainer("firm", preference=(p0, 1.0 / p0), seed=1)
+        hist, us_ = timed_rounds(tr, ROUNDS)
+        us = max(us, us_)
+        points.append({"preference": [p0, round(1.0 / p0, 3)],
+                       "rewards": hist[-1]["rewards"].tolist(),
+                       "lam_mean": hist[-1]["lam_mean"].tolist()})
+    lam0 = [pt["lam_mean"][0] for pt in points]
+    return row("fig4_rq3_preference_pareto", us,
+               {"points": points,
+                "lam0_monotone_in_pref": bool(lam0[0] <= lam0[-1])})
+
+
+def bench_hetero_reward_models():
+    out = {}
+    us = 0.0
+    for name, het in (("same_rms", False), ("different_rms", True)):
+        tr = make_trainer("firm", heterogeneous_rms=het, n_clients=2)
+        hist, us_ = timed_rounds(tr, ROUNDS)
+        us = max(us, us_)
+        out[name] = {
+            "lam_mean": hist[-1]["lam_mean"].tolist(),
+            "final_rewards": hist[-1]["rewards"].tolist(),
+            "lam_disagreement": float(np.mean(
+                [h["lam_disagreement"] for h in hist])),
+        }
+    return row("fig5_heterogeneous_rms", us, out)
+
+
+def bench_client_scaling():
+    out = {}
+    us = 0.0
+    for c in (2, 4):
+        tr = make_trainer("firm", n_clients=c)
+        hist, us_ = timed_rounds(tr, ROUNDS)
+        us = max(us, us_)
+        out[f"C={c}"] = {
+            "lam_mean": hist[-1]["lam_mean"].tolist(),
+            "final_rewards": hist[-1]["rewards"].tolist(),
+        }
+    return row("fig7_client_scaling", us, out)
+
+
+def bench_three_objectives():
+    out = {}
+    us = 0.0
+    for alg in ("firm", "fedcmoo"):
+        tr = make_trainer(alg, m=3)
+        hist, us_ = timed_rounds(tr, ROUNDS)
+        us = max(us, us_)
+        out[alg] = {"final_rewards": hist[-1]["rewards"].tolist(),
+                    "lam_mean": hist[-1]["lam_mean"].tolist()}
+    return row("fig8_three_objectives", us, out)
+
+
+def bench_comms_table():
+    """Fig. 1: analytic bytes at the paper's production scale (LoRA on
+    Llama-3.2-1B: d ~= 2.3M adapter params) + the measured toy ledger."""
+    d = 2_300_000
+    table = {}
+    for m in (2, 3):
+        f = comms.firm_round_bytes(d, n_clients=8, local_steps=3)
+        s = comms.fedcmoo_round_bytes(d, n_clients=8, n_objectives=m,
+                                      local_steps=3)
+        sc = comms.fedcmoo_round_bytes(d, n_clients=8, n_objectives=m,
+                                       local_steps=3, compress_rank=50000)
+        table[f"M={m}"] = {
+            "firm_MB": f["total"] / 1e6,
+            "fedcmoo_MB": s["total"] / 1e6,
+            "fedcmoo_compressed_MB": sc["total"] / 1e6,
+            "ratio": s["total"] / f["total"],
+        }
+    tr_f = make_trainer("firm", local_steps=2)
+    tr_f.run(1)
+    tr_s = make_trainer("fedcmoo", local_steps=2)
+    tr_s.run(1)
+    table["measured_toy_ratio"] = tr_s.ledger.total / tr_f.ledger.total
+    return row("fig1_comms_table", 0.0, table)
+
+
+ALL = [bench_rq1_firm_vs_fedcmoo, bench_rq2_regularization,
+       bench_rq3_preference_pareto, bench_hetero_reward_models,
+       bench_client_scaling, bench_three_objectives, bench_comms_table]

@@ -1,0 +1,76 @@
+"""Roofline report (deliverable g): reads runs/dryrun.json and emits the
+per-(arch x shape x mesh) table of roofline terms + dominant bottleneck.
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out runs/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN = os.environ.get("DRYRUN_JSON", "runs/dryrun.json")
+
+
+def _bottleneck_note(rec) -> str:
+    dom = rec["dominant_term"]
+    if dom == "memory_s":
+        return "increase arithmetic intensity (fusion/remat policy/dtype)"
+    if dom == "collective_s":
+        return "reduce resharding (sharding axes, overlap collectives)"
+    return "compute-bound: good (raise MXU utilisation via tiling)"
+
+
+def bench_roofline_table():
+    if not os.path.exists(DRYRUN):
+        return row("roofline_table", 0.0,
+                   {"error": f"{DRYRUN} missing; run the dry-run first"})
+    recs = json.load(open(DRYRUN))
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    table = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rf = r["roofline"]
+        table.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": r["dominant_term"].replace("_s", ""),
+            "useful_flop_ratio": r["useful_flop_ratio"],
+            "temp_GB_per_dev": r["memory"]["temp_bytes"] / 1e9,
+        })
+    doms = {}
+    for t in table:
+        doms[t["dominant"]] = doms.get(t["dominant"], 0) + 1
+    return row("roofline_table", 0.0, {
+        "pairs_ok": len(ok), "pairs_skipped": len(skipped),
+        "dominant_counts": doms,
+        "note": "full table in EXPERIMENTS.md §Roofline",
+    })
+
+
+def bench_roofline_per_pair():
+    """Emit one CSV row per (arch, shape) single-pod baseline."""
+    if not os.path.exists(DRYRUN):
+        return []
+    recs = json.load(open(DRYRUN))
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        rf = r["roofline"]
+        rows.append(row(
+            f"roofline[{r['arch']}|{r['shape']}]",
+            rf[r["dominant_term"]] * 1e6,       # dominant term in us
+            {"compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+             "collective_s": rf["collective_s"],
+             "dominant": r["dominant_term"],
+             "useful": r["useful_flop_ratio"],
+             "fix": _bottleneck_note(r)}))
+    return rows
+
+
+ALL = [bench_roofline_table]

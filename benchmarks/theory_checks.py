@@ -1,0 +1,115 @@
+"""Benchmarks validating the paper's THEORY claims numerically.
+
+thm45_drift_scaling : the disagreement-drift term O(sqrt(M^3)/(beta sqrt(B)))
+                      — lambda disagreement vs beta and vs batch size B
+lemma_f6            : empirical certificate of the stability lemma
+linear_speedup      : variance term O(1/(CB)) — gradient variance vs C*B
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import drift, mgda
+
+
+def _noisy_client_lambdas(key, beta, batch, m=2, d=512, n_clients=8,
+                          grad_noise=0.25):
+    """Simulate clients estimating the same M gradients from B samples
+    (noise ~ 1/sqrt(B)), each solving the regularized MGDA QP.
+
+    Noise is kept << signal so the 1/(beta sqrt(B)) regime of Thm 4.5
+    applies (at huge noise the noise itself inflates the Gram diagonal,
+    which self-regularises and masks the trend)."""
+    base = jax.random.normal(key, (m, d))
+    base = base / jnp.linalg.norm(base, axis=1, keepdims=True)
+    base = base.at[1].set(0.9 * base[0] + 0.45 * base[1])  # correlated
+    lams = []
+    for c in range(n_clients):
+        noise = grad_noise / np.sqrt(batch) / np.sqrt(d) * \
+            jax.random.normal(jax.random.fold_in(key, 100 + c), (m, d))
+        G = mgda.gram_matrix(base + noise)
+        lams.append(mgda.solve(G, beta, iters=300))
+    return jnp.stack(lams)
+
+
+def bench_thm45_drift_scaling():
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    out = {"vs_beta": {}, "vs_batch": {}}
+    for beta in (0.0, 0.01, 0.1, 1.0):
+        ds = [float(drift.lambda_disagreement(
+            _noisy_client_lambdas(jax.random.fold_in(key, s), beta, 16)
+        )["pairwise_mean"]) for s in range(5)]
+        out["vs_beta"][str(beta)] = float(np.mean(ds))
+    for batch in (4, 16, 64, 256):
+        ds = [float(drift.lambda_disagreement(
+            _noisy_client_lambdas(jax.random.fold_in(key, 50 + s), 0.05,
+                                  batch))["pairwise_mean"])
+              for s in range(5)]
+        out["vs_batch"][str(batch)] = float(np.mean(ds))
+    b = out["vs_beta"]
+    out["drift_decreases_with_beta"] = bool(b["1.0"] < b["0.0"])
+    v = out["vs_batch"]
+    out["drift_decreases_with_B"] = bool(v["256"] < v["4"])
+    us = (time.time() - t0) * 1e6 / 40
+    return row("thm45_drift_scaling", us, out)
+
+
+def bench_lemma_f6_certificate():
+    key = jax.random.PRNGKey(3)
+    t0 = time.time()
+    worst = 0.0
+    m, d, beta = 3, 256, 0.2
+    for i in range(20):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        g1 = [0.2 * jax.random.normal(jax.random.fold_in(k1, j), (d,))
+              for j in range(m)]
+        g2 = [a + 0.02 * jax.random.normal(jax.random.fold_in(k2, j), (d,))
+              for j, a in enumerate(g1)]
+        l1 = mgda.solve(mgda.gram_matrix(g1), beta, trace_normalize=False,
+                        iters=500)
+        l2 = mgda.solve(mgda.gram_matrix(g2), beta, trace_normalize=False,
+                        iters=500)
+        chk = drift.lemma_f6_check(g1, g2, l1, l2, beta)
+        worst = max(worst, float(chk["lhs"] / (chk["rhs"] + 1e-12)))
+    us = (time.time() - t0) * 1e6 / 20
+    return row("lemma_f6_certificate", us,
+               {"worst_lhs_over_rhs": worst, "bound_holds": worst <= 1.0})
+
+
+def bench_linear_speedup_variance():
+    """Variance of the AVERAGED client direction scales ~1/(C*B)."""
+    key = jax.random.PRNGKey(9)
+    t0 = time.time()
+    d = 256
+
+    def avg_dir_var(c, b, trials=20):
+        dirs = []
+        for t in range(trials):
+            kt = jax.random.fold_in(key, t)
+            per_client = []
+            for ci in range(c):
+                g = jnp.ones((2, d)) + (1.0 / np.sqrt(b)) * \
+                    jax.random.normal(jax.random.fold_in(kt, ci), (2, d))
+                lam = mgda.solve(mgda.gram_matrix(g), 0.05, iters=200)
+                per_client.append(mgda.combine(g, lam))
+            dirs.append(jnp.stack(per_client).mean(0))
+        dirs = jnp.stack(dirs)
+        return float(dirs.var(axis=0).sum())
+
+    out = {}
+    for c, b in ((1, 4), (4, 4), (1, 16), (4, 16)):
+        out[f"C={c},B={b}"] = avg_dir_var(c, b)
+    out["speedup_in_C"] = out["C=1,B=4"] / max(out["C=4,B=4"], 1e-12)
+    out["speedup_in_B"] = out["C=1,B=4"] / max(out["C=1,B=16"], 1e-12)
+    us = (time.time() - t0) * 1e6 / 80
+    return row("thm45_linear_speedup_variance", us, out)
+
+
+ALL = [bench_thm45_drift_scaling, bench_lemma_f6_certificate,
+       bench_linear_speedup_variance]

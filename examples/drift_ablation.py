@@ -1,0 +1,39 @@
+"""RQ2 (paper Fig. 3): multi-objective disagreement drift with and
+without FIRM's regularization (beta = 0 vs beta > 0).
+
+  PYTHONPATH=src python examples/drift_ablation.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig
+from repro.fed.engine import EngineConfig, FederatedTrainer
+
+ROUNDS = 4
+
+
+def run(algorithm):
+    cfg = get_config("llama-3.2-1b").reduced(n_layers=2, d_model=128,
+                                             vocab=512)
+    fc = FIRMConfig(n_objectives=2, n_clients=2, local_steps=1,
+                    batch_size=4, beta=0.05)
+    tr = FederatedTrainer(cfg, fc, EngineConfig(algorithm=algorithm,
+                                                max_new=16, prompt_len=8,
+                                                seed=7))
+    return tr.run(ROUNDS)
+
+
+def main():
+    for name, alg in (("FIRM beta=0.05", "firm"),
+                      ("unregularized beta=0", "firm_unreg")):
+        hist = run(alg)
+        drift = [round(h["lam_disagreement"], 4) for h in hist]
+        print(f"{name}:")
+        print(f"  per-round lambda disagreement: {drift}")
+        print(f"  final rewards: {np.round(hist[-1]['rewards'], 3).tolist()}")
+    print("beta > 0 keeps client lambda trajectories consistent "
+          "(paper Fig. 3c/3d).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: one federated FIRM alignment round in ~a minute on CPU.
+
+Runs the paper's Algorithm 1 end-to-end on a reduced Llama-3.2-family
+model: C clients sample prompts, generate responses, score them with two
+conflicting reward models (helpfulness / harmlessness), compute M PPO
+gradients, resolve them locally with the beta-regularized MGDA QP, and the
+server FedAvg-aggregates the LoRA adapters.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig
+from repro.fed.engine import EngineConfig, FederatedTrainer
+
+
+def main():
+    cfg = get_config("llama-3.2-1b").reduced(n_layers=2, d_model=128,
+                                             vocab=512)
+    fc = FIRMConfig(n_objectives=2, n_clients=2, local_steps=2,
+                    batch_size=4, beta=0.01)
+    trainer = FederatedTrainer(cfg, fc, EngineConfig(max_new=16,
+                                                     prompt_len=8))
+    print(f"model={cfg.name}  C={fc.n_clients}  K={fc.local_steps}  "
+          f"beta={fc.beta}  adapters={trainer.d_trainable:,} params")
+    for r in range(3):
+        s = trainer.run_round()
+        print(f"round {r + 1}: rewards(help,harm)="
+              f"{np.round(s['rewards'], 3).tolist()}  "
+              f"lambda={np.round(s['lam_mean'], 3).tolist()}  "
+              f"drift={s['lam_disagreement']:.4f}  "
+              f"comm={s['comm_bytes'] / 1e6:.1f}MB")
+    print("done — the same API scales to every config in repro/configs "
+          "(see launch/train.py and the multi-pod dry-run).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Render the EXPERIMENTS.md §Roofline table from runs/dryrun.json."""
+import json
+import sys
+
+path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.json"
+recs = json.load(open(path))
+
+print("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+      "dominant | 6ND/HLO | temp GB/dev |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    if r["status"] == "skipped":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+              f"skipped | — | — |")
+        continue
+    if r["status"] != "ok":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | "
+              f"| | |")
+        continue
+    rf = r["roofline"]
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+          f"| {rf['compute_s']:.4g} | {rf['memory_s']:.4g} "
+          f"| {rf['collective_s']:.4g} "
+          f"| **{r['dominant_term'].replace('_s','')}** "
+          f"| {r['useful_flop_ratio']:.2f} "
+          f"| {r['memory']['temp_bytes']/1e9:.1f} |")

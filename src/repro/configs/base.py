@@ -1,0 +1,217 @@
+"""Model / run configuration dataclasses.
+
+A ``ModelConfig`` fully describes one architecture from the assigned pool.
+The layer stack is expressed as a *periodic pattern*: ``pattern`` is the
+tuple of block kinds inside one period and ``n_periods`` repeats it, so
+``n_layers == len(pattern) * n_periods``.  The forward pass scans over
+periods (O(1)-depth HLO) and unrolls the (short) pattern inside the scan
+body.  Block kinds:
+
+  'attn'        full-causal GQA self-attention + SwiGLU MLP
+  'swa'         sliding-window GQA self-attention + MLP (or MoE if moe set)
+  'moe'         full-causal GQA self-attention + MoE FFN
+  'moe_swa'     sliding-window GQA + MoE FFN
+  'cross'       GQA self-attention + cross-attention (to vision/encoder
+                embeddings) + MLP          (VLM / decoder blocks)
+  'mamba2'      Mamba2 SSD block
+  'shared_attn' attention block with ONE shared parameter set reused every
+                period (zamba2-style)
+  'mlstm'       xLSTM matrix-memory (linear-attention) block
+  'slstm'       xLSTM scalar-memory recurrent block
+  'enc_attn'    bidirectional encoder attention + MLP (whisper encoder)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 16
+    alpha: float = 32.0
+    # projection names inside attention blocks that receive adapters
+    targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # layer program -----------------------------------------------------
+    pattern: Tuple[str, ...] = ("attn",)
+    n_periods: int = 0               # 0 -> n_layers / len(pattern)
+    # attention ----------------------------------------------------------
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    rope_theta: float = 500000.0
+    sliding_window: int = 0          # 0 -> full attention
+    # extras ---------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128             # SSD chunk length (perf knob)
+    conv_dim: int = 4                # mamba conv kernel width
+    # vlm / enc-dec --------------------------------------------------------
+    n_vision_tokens: int = 0         # VLM stub patch-embedding count
+    encoder_layers: int = 0          # whisper encoder depth
+    encoder_len_ratio: int = 1       # enc frames = seq // ratio at train
+    decoder_len_ratio: int = 1       # dec tokens = seq // ratio at train
+    # adapters / training --------------------------------------------------
+    lora: Optional[LoRAConfig] = LoRAConfig()
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    remat: bool = True               # jax.checkpoint around each period
+    remat_policy: str = "full"       # full | dots (save MXU outputs)
+    attn_block: int = 512            # chunked-attention KV block size
+    mlstm_chunk: int = 0             # 0 = exact recurrence; >0 = chunkwise
+    batched_vjp: bool = True         # vmap the M cotangent pulls (§Perf:
+                                     # shares one remat forward across M)
+    tensor_parallel: bool = True     # shard weights on 'model' (off = pure
+                                     # DP; right call for sub-1B models)
+    # provenance -----------------------------------------------------------
+    source: str = ""
+    # capability flags -------------------------------------------------------
+    subquadratic: bool = False       # eligible for long_500k
+    is_encoder_decoder: bool = False
+
+    # ------------------------------------------------------------------ derived
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_periods == 0:
+            object.__setattr__(
+                self, "n_periods", max(1, self.n_layers // len(self.pattern)))
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256,
+                vocab: int = 512) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        pat = self.pattern
+        n_per = max(1, n_layers // len(pat))
+        n_heads = max(2, min(4, self.n_heads))
+        n_kv = max(1, min(n_heads, self.n_kv_heads))
+        if n_heads % n_kv:
+            n_kv = 1
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(self.moe,
+                                      n_experts=min(4, self.moe.n_experts),
+                                      top_k=min(2, self.moe.top_k))
+        return dataclasses.replace(
+            self, name=self.name + "-smoke", n_layers=n_per * len(pat),
+            n_periods=n_per, d_model=d_model, n_heads=n_heads,
+            n_kv_heads=n_kv, head_dim=d_model // n_heads,
+            d_ff=2 * d_model, vocab=vocab, moe=moe,
+            ssm_state=min(16, self.ssm_state) if self.ssm_state else 0,
+            n_vision_tokens=min(16, self.n_vision_tokens),
+            encoder_layers=min(2, self.encoder_layers),
+            sliding_window=min(128, self.sliding_window)
+            if self.sliding_window else 0,
+        )
+
+    # parameter count (analytic, for roofline MODEL_FLOPS) ----------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, dff, hd = self.d_model, self.d_ff, self.head_dim
+        per = {}
+        q = self.n_heads * hd
+        kv = self.n_kv_heads * hd
+        attn = d * q + 2 * d * kv + q * d
+        mlp = 3 * d * dff
+        if self.moe is not None:
+            n_e = self.moe.top_k if active_only else self.moe.n_experts
+            moe_mlp = 3 * d * dff * n_e + d * self.moe.n_experts
+        else:
+            moe_mlp = mlp
+        din = self.ssm_expand * d
+        nh_ssm = max(1, din // self.ssm_head_dim) if self.ssm_state else 0
+        mamba = (d * (2 * din + 2 * self.ssm_state + nh_ssm)  # in_proj
+                 + self.conv_dim * (din + 2 * self.ssm_state)
+                 + din * d + nh_ssm * 2)                       # out_proj, A, D
+        per["attn"] = attn + mlp + 2 * d
+        per["enc_attn"] = per["attn"]
+        per["swa"] = per["attn"]
+        per["moe"] = attn + moe_mlp + 2 * d
+        per["moe_swa"] = per["moe"]
+        per["cross"] = attn + (d * q + 2 * d * kv + q * d) + mlp + 3 * d
+        per["mamba2"] = mamba + d
+        per["shared_attn"] = attn + mlp + 2 * d
+        per["mlstm"] = (d * 3 * q + q * d + 2 * d * dff if dff else
+                        d * 3 * q + q * d + 3 * self.n_heads * hd) + d
+        per["slstm"] = 4 * (d * d + d * d + 2 * d) + d
+        total = 0
+        seen_shared = False
+        for kind in self.pattern:
+            n = 1 if kind == "shared_attn" and seen_shared else self.n_periods
+            if kind == "shared_attn":
+                n = 1  # one parameter set total
+                seen_shared = True
+            total += per[kind] * n
+        total += self.vocab * d              # embed
+        if not self.tie_embeddings:
+            total += self.vocab * d          # lm head
+        total += d                           # final norm
+        if self.encoder_layers:
+            total += self.encoder_layers * per["enc_attn"]
+        return int(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FIRMConfig:
+    """Hyper-parameters of the paper's algorithm (Alg. 1 + App. A)."""
+    n_objectives: int = 2
+    n_clients: int = 8
+    rounds: int = 16
+    local_steps: int = 3             # K
+    batch_size: int = 16             # B prompts per local step
+    beta: float = 0.01               # MGDA regularization (T2)
+    preference: Optional[Tuple[float, ...]] = None   # p vector (Eq. 3)
+    # beyond-paper extensions (paper §6 future work) -----------------------
+    participation: float = 1.0       # fraction of clients sampled per round
+    client_preferences: Optional[Tuple[Tuple[float, ...], ...]] = None
+    # per-client p vectors (pluralistic alignment); overrides `preference`
+    lambda_smoothing: bool = True    # eta_t smoothing (Alg. 2, Eq. 12)
+    eta0: float = 1.0
+    actor_lr: float = 6e-5
+    critic_lr: float = 1e-4
+    ppo_clip: float = 0.2
+    kl_target: float = 0.03
+    kl_coef_init: float = 0.1
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    trace_normalize: bool = True     # App. A Gram normalisation
+    solver: str = "pgd"              # pgd | closed_form_m2 | frank_wolfe
+    solver_iters: int = 100

@@ -1,0 +1,21 @@
+"""mistral-large-123b [dense].  [hf:mistralai/Mistral-Large-Instruct-2407]
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=32768,
+    pattern=("attn",),
+    n_periods=88,
+    rope_theta=1000000.0,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+    subquadratic=False,
+)

@@ -1,0 +1,4 @@
+"""FIRM core: the paper's contribution as composable JAX modules."""
+from repro.core import comms, drift, fedavg, fedcmoo, firm, mgda  # noqa
+
+__all__ = ["mgda", "firm", "fedavg", "fedcmoo", "drift", "comms"]

@@ -1,0 +1,68 @@
+"""Multi-objective disagreement drift diagnostics (paper §3, Rmk 4.8,
+Lemma F.6).  These metrics drive the RQ2 experiments and the property
+tests that check the paper's bounds empirically."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def lambda_disagreement(lams: jnp.ndarray) -> dict:
+    """lams: (C, M) per-client MGDA weights.
+
+    Returns mean/max pairwise ||λ_c − λ_c'||₂ and the deviation from the
+    mean λ̄ — the quantity inside T_{1,1}^{disagr-drift} (Eq. 7).
+    """
+    c = lams.shape[0]
+    diff = lams[:, None, :] - lams[None, :, :]            # (C, C, M)
+    pd = jnp.sqrt(jnp.sum(diff ** 2, -1) + 1e-30)
+    off = pd[jnp.triu_indices(c, k=1)]
+    bar = lams.mean(0)
+    return {
+        "pairwise_mean": off.mean() if off.size else jnp.zeros(()),
+        "pairwise_max": off.max() if off.size else jnp.zeros(()),
+        "to_mean": jnp.sqrt(((lams - bar) ** 2).sum(-1)).mean(),
+    }
+
+
+def gradient_bound_R(grads: Sequence) -> jnp.ndarray:
+    """R = max_j ||g_j||₂ over objectives (Lemma F.5 empirical stand-in)."""
+    norms = [jnp.sqrt(sum(jnp.vdot(l, l).real
+                          for l in jax.tree_util.tree_leaves(g)))
+             for g in grads]
+    return jnp.max(jnp.stack(norms))
+
+
+def lemma_f6_check(grads_c: Sequence, grads_c2: Sequence,
+                   lam_c: jnp.ndarray, lam_c2: jnp.ndarray,
+                   beta: float) -> dict:
+    """Empirical check of Lemma F.6:
+       ||λ*c − λ*c'|| ≤ (4RM/β) max_j ||g_j^c − g_j^c'||.
+    NOTE: with App.-A trace normalisation the effective gradients are
+    g/sqrt(tr(G)/M); we report both raw and the bound certificate."""
+    m = len(grads_c)
+    r = jnp.maximum(gradient_bound_R(grads_c), gradient_bound_R(grads_c2))
+    max_diff = jnp.max(jnp.stack([
+        jnp.sqrt(sum(jnp.vdot(a - b, a - b).real
+                     for a, b in zip(jax.tree_util.tree_leaves(gc),
+                                     jax.tree_util.tree_leaves(gc2))))
+        for gc, gc2 in zip(grads_c, grads_c2)]))
+    lhs = jnp.linalg.norm(lam_c - lam_c2)
+    rhs = (4.0 * r * m / beta) * max_diff
+    return {"lhs": lhs, "rhs": rhs, "R": r, "max_grad_diff": max_diff}
+
+
+def param_drift(client_trees: Sequence) -> jnp.ndarray:
+    """Mean pairwise L2 distance between client parameter trees."""
+    c = len(client_trees)
+    flats = [jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                              for l in jax.tree_util.tree_leaves(t)])
+             for t in client_trees]
+    total, n = 0.0, 0
+    for i in range(c):
+        for j in range(i + 1, c):
+            total = total + jnp.linalg.norm(flats[i] - flats[j])
+            n += 1
+    return total / max(n, 1)

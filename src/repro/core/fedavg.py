@@ -1,0 +1,35 @@
+"""FedAvg aggregation — host-side (simulation) and collective (mesh) forms."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(trees: Sequence):
+    """θ ← (1/C) Σ_c θ_c over a list of client param pytrees."""
+    c = len(trees)
+    out = trees[0]
+    for t in trees[1:]:
+        out = jax.tree_util.tree_map(lambda a, b: a + b, out, t)
+    return jax.tree_util.tree_map(lambda a: a / c, out)
+
+
+def fedavg_weighted(trees: Sequence, weights: Sequence[float]):
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / w.sum()
+    out = jax.tree_util.tree_map(lambda a: a * w[0], trees[0])
+    for i, t in enumerate(trees[1:], start=1):
+        out = jax.tree_util.tree_map(lambda a, b: a + b * w[i], out, t)
+    return out
+
+
+def fedavg_collective(tree, axis_name: str = "pod"):
+    """Cross-pod FedAvg as a single all-reduce (the O(Cd) collective).
+
+    Use inside shard_map/pjit over the federated 'pod' mesh axis; this is
+    the ONLY cross-pod communication a FIRM round emits (DESIGN §3).
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.pmean(x, axis_name), tree)

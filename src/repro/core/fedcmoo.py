@@ -1,0 +1,65 @@
+"""FedCMOO baseline — server-centric conflict resolution (Askin et al. 2024,
+adapted to alignment as in paper §5 RQ1).
+
+Protocol per step: every client sends its M objective gradients (optionally
+sketch-compressed) to the server; the server averages them, solves ONE
+MGDA problem, and broadcasts the global λ back; clients then apply
+g_c = Σ_j λ_j g_j^c.  Communication is O(CMd) uncompressed, O(CMq) with a
+rank-q sketch — plus the extra λ round-trip every step.
+
+The paper's RQ1 comparison disables compression; we implement both so the
+convergence-vs-compression-error trade-off (their q term) is measurable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mgda
+
+
+def flatten_grads(grads: Sequence) -> jnp.ndarray:
+    """List of M pytrees -> (M, d) matrix (f32)."""
+    rows = []
+    for g in grads:
+        leaves = jax.tree_util.tree_leaves(g)
+        rows.append(jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves]))
+    return jnp.stack(rows)
+
+
+def sketch(flat: jnp.ndarray, q: int, key) -> jnp.ndarray:
+    """JL sketch: (M, d) -> (M, q); Gram is approximately preserved."""
+    d = flat.shape[1]
+    s = jax.random.normal(key, (d, q), jnp.float32) / jnp.sqrt(q)
+    return flat @ s
+
+
+def server_solve(client_grads: Sequence[jnp.ndarray], beta: float = 0.0,
+                 trace_normalize: bool = True, solver: str = "pgd",
+                 iters: int = 100) -> jnp.ndarray:
+    """Server step: average client gradient matrices, solve one MGDA.
+
+    client_grads: list over clients of (M, d|q) matrices (raw or sketched).
+    Returns the global λ broadcast to all clients.  β defaults to 0 —
+    FedCMOO does not regularise; disagreement drift is avoided *by design*
+    (single server λ) at the cost of O(CMd) communication.
+    """
+    avg = sum(client_grads) / len(client_grads)
+    G = mgda.gram_matrix(avg)
+    return mgda.solve(G, beta, trace_normalize=trace_normalize,
+                      solver=solver, iters=iters)
+
+
+def fedcmoo_round_lambda(per_client_grads: Sequence[Sequence],
+                         compress_rank: Optional[int] = None,
+                         key=None, **solve_kw) -> jnp.ndarray:
+    """One conflict-resolution round.  per_client_grads[c] = M pytrees."""
+    mats = [flatten_grads(g) for g in per_client_grads]
+    if compress_rank:
+        keys = jax.random.split(key, len(mats))
+        # all clients must use the SAME sketch for the Gram to be consistent
+        mats = [sketch(m, compress_rank, keys[0]) for m in mats]
+    return server_solve(mats, **solve_kw)

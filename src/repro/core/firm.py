@@ -1,0 +1,56 @@
+"""FIRM in-client gradient resolution (paper Alg. 1 / Alg. 2 Eq. 12).
+
+``resolve`` is the heart of the paper: given M per-objective gradients it
+(1) forms the Gram matrix (Pallas kernel on TPU, jnp fallback elsewhere),
+(2) trace-normalises (App. A), (3) solves the β-regularised MGDA QP
+(Eq. 1/9, or the preference-weighted Eq. 3), (4) optionally smooths λ with
+the η_t schedule of Alg. 2, and (5) returns the single consensus direction
+g = Σ_j λ_j g_j that the client applies locally.  No gradient ever leaves
+the client — only adapted parameters are communicated (O(Cd)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FIRMConfig
+from repro.core import mgda
+
+
+class ResolveResult(NamedTuple):
+    direction: object            # pytree: Σ λ_j g_j
+    lam: jnp.ndarray             # λ used for the update (post-smoothing)
+    lam_star: jnp.ndarray        # raw QP solution λ*
+    gram: jnp.ndarray            # unnormalised Gram matrix (M, M)
+
+
+def resolve(grads: Sequence, fc: FIRMConfig,
+            prev_lam: Optional[jnp.ndarray] = None,
+            eta: Optional[jnp.ndarray] = None,
+            gram_fn=None) -> ResolveResult:
+    """Resolve M per-objective gradients into one direction (Eq. 1).
+
+    grads: list of M gradient pytrees (or stacked (M, d) array).
+    prev_lam/eta: λ smoothing state (Alg. 2 Eq. 12); eta=1 disables.
+    gram_fn: override for the Gram computation (e.g. the Pallas kernel).
+    """
+    G = (gram_fn or mgda.gram_matrix)(grads)
+    pref = (jnp.asarray(fc.preference, jnp.float32)
+            if fc.preference is not None else None)
+    lam_star = mgda.solve(G, fc.beta, preference=pref,
+                          trace_normalize=fc.trace_normalize,
+                          solver=fc.solver, iters=fc.solver_iters)
+    if fc.lambda_smoothing and prev_lam is not None:
+        e = eta if eta is not None else jnp.asarray(fc.eta0, jnp.float32)
+        lam = (1.0 - e) * prev_lam + e * lam_star
+    else:
+        lam = lam_star
+    direction = mgda.combine(grads, lam)
+    return ResolveResult(direction, lam, lam_star, G)
+
+
+def eta_schedule(t: jnp.ndarray) -> jnp.ndarray:
+    """η_t = 1/t (App. F.3.3), with η_1 = 1."""
+    return 1.0 / jnp.maximum(t.astype(jnp.float32), 1.0)

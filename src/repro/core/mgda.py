@@ -1,0 +1,141 @@
+"""Regularized MGDA subproblem solvers (paper Eq. 1-3, 9, App. A/H).
+
+Solve  λ* = argmin_{λ∈Δ_M}  λᵀ (Ĝ + R) λ
+where Ĝ is the (optionally trace-normalised, App. A) Gram matrix of the M
+objective gradients and R is either the uniform regulariser (β/2)·I (Eq. 2)
+or the preference regulariser Diag(p⁻¹) (Eq. 3 / App. H).
+
+All solvers are jit-safe (fixed iteration counts, lax control flow):
+  - closed_form_m2 : exact for M = 2 (1-D quadratic on a segment)
+  - pgd           : projected gradient descent with sort-based simplex
+                    projection (exact for strongly-convex Q as iters → ∞)
+  - frank_wolfe   : FW with exact line search for the quadratic
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_matrix(grads) -> jnp.ndarray:
+    """Gram matrix of M gradient pytrees: G_ij = <g_i, g_j> (f32).
+
+    ``grads`` is a list of pytrees (one per objective) or a stacked
+    (M, d) array.
+    """
+    if isinstance(grads, jnp.ndarray):
+        return (grads.astype(jnp.float32) @ grads.astype(jnp.float32).T)
+    m = len(grads)
+    leaves = [jax.tree_util.tree_leaves(g) for g in grads]
+
+    def dot(i, j):
+        return sum(jnp.vdot(a.astype(jnp.float32), b.astype(jnp.float32))
+                   for a, b in zip(leaves[i], leaves[j]))
+
+    rows = []
+    for i in range(m):
+        rows.append(jnp.stack([dot(i, j) for j in range(m)]))
+    return jnp.stack(rows)
+
+
+def regularize(G: jnp.ndarray, beta: float,
+               preference: Optional[jnp.ndarray] = None,
+               trace_normalize: bool = True) -> jnp.ndarray:
+    """Ĝ + (β/2)I  or  Ĝ + Diag(p⁻¹)  (Eq. 9 / Eq. 3)."""
+    m = G.shape[0]
+    if trace_normalize:
+        G = G / jnp.maximum(jnp.trace(G) / m, 1e-12)      # App. A
+    if preference is not None:
+        # Eq. 3 / App. H: Diag(p^{-1}) replaces the uniform (β/2)I.
+        p = jnp.asarray(preference, jnp.float32)
+        return G + jnp.diag(1.0 / jnp.maximum(p, 1e-9))
+    return G + 0.5 * beta * jnp.eye(m, dtype=G.dtype)
+
+
+def project_simplex(v: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean projection onto the probability simplex (sort method)."""
+    m = v.shape[-1]
+    u = jnp.sort(v)[..., ::-1]
+    css = jnp.cumsum(u, axis=-1)
+    k = jnp.arange(1, m + 1, dtype=v.dtype)
+    cond = u + (1.0 - css) / k > 0
+    rho = jnp.sum(cond, axis=-1)
+    theta = (jnp.take_along_axis(css, rho[None] - 1, axis=-1)[..., 0] - 1.0) \
+        / rho.astype(v.dtype)
+    return jnp.maximum(v - theta, 0.0)
+
+
+def solve_qp_pgd(Q: jnp.ndarray, iters: int = 100,
+                 lam0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """min_{λ∈Δ} λᵀQλ by projected gradient descent."""
+    m = Q.shape[0]
+    lam = lam0 if lam0 is not None else jnp.full((m,), 1.0 / m, jnp.float32)
+    lip = 2.0 * jnp.linalg.norm(Q, ord="fro") + 1e-9
+    step = 1.0 / lip
+
+    def body(_, lam):
+        grad = 2.0 * Q @ lam
+        return project_simplex(lam - step * grad)
+
+    return jax.lax.fori_loop(0, iters, body, lam)
+
+
+def solve_qp_m2(Q: jnp.ndarray) -> jnp.ndarray:
+    """Exact minimiser on Δ_2: λ = [t, 1-t]."""
+    a = Q[0, 0] - 2.0 * Q[0, 1] + Q[1, 1]
+    t = jnp.where(a > 1e-12, (Q[1, 1] - Q[0, 1]) / jnp.maximum(a, 1e-12), 0.5)
+    t = jnp.clip(t, 0.0, 1.0)
+    return jnp.stack([t, 1.0 - t])
+
+
+def solve_qp_frank_wolfe(Q: jnp.ndarray, iters: int = 100) -> jnp.ndarray:
+    m = Q.shape[0]
+    lam = jnp.full((m,), 1.0 / m, jnp.float32)
+
+    def body(_, lam):
+        grad = 2.0 * Q @ lam
+        s = jax.nn.one_hot(jnp.argmin(grad), m, dtype=jnp.float32)
+        d = s - lam
+        # exact line search for quadratic: γ* = -λᵀQd / dᵀQd
+        denom = d @ Q @ d
+        gamma = jnp.where(denom > 1e-12,
+                          jnp.clip(-(lam @ Q @ d) / jnp.maximum(denom, 1e-12),
+                                   0.0, 1.0),
+                          0.0)
+        return lam + gamma * d
+
+    return jax.lax.fori_loop(0, iters, body, lam)
+
+
+_SOLVERS = {"pgd": solve_qp_pgd, "closed_form_m2": solve_qp_m2,
+            "frank_wolfe": solve_qp_frank_wolfe}
+
+
+def solve(G: jnp.ndarray, beta: float,
+          preference: Optional[jnp.ndarray] = None,
+          trace_normalize: bool = True, solver: str = "pgd",
+          iters: int = 100) -> jnp.ndarray:
+    """End-to-end: regularise G and return λ* ∈ Δ_M."""
+    Q = regularize(G, beta, preference, trace_normalize)
+    if solver == "closed_form_m2":
+        if G.shape[0] != 2:
+            raise ValueError("closed_form_m2 requires M=2")
+        return solve_qp_m2(Q)
+    if solver == "frank_wolfe":
+        return solve_qp_frank_wolfe(Q, iters)
+    return solve_qp_pgd(Q, iters)
+
+
+def combine(grads, lam: jnp.ndarray):
+    """g = Σ_j λ_j g_j over pytrees (or a stacked (M, d) array)."""
+    if isinstance(grads, jnp.ndarray):
+        return jnp.einsum("m,md->d", lam, grads)
+    out = jax.tree_util.tree_map(lambda x: lam[0].astype(x.dtype) * x,
+                                 grads[0])
+    for j in range(1, len(grads)):
+        out = jax.tree_util.tree_map(
+            lambda a, x: a + lam[j].astype(x.dtype) * x, out, grads[j])
+    return out

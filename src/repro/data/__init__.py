@@ -1,0 +1,3 @@
+from repro.data import partition, prompts  # noqa
+
+__all__ = ["prompts", "partition"]

@@ -1,0 +1,59 @@
+"""Synthetic HH-style prompt distribution (DESIGN §5).
+
+Prompts are token sequences drawn from per-topic unigram distributions over
+disjoint-ish vocabulary bands; topics give the Dirichlet partition
+something real to be non-IID over.  Deterministic given (seed, topic).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+N_TOPICS = 8
+
+
+def topic_logits(vocab: int, n_topics: int = N_TOPICS,
+                 seed: int = 0) -> jnp.ndarray:
+    """(n_topics, vocab) unigram logits, each topic peaked on its band."""
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (n_topics, vocab)) * 0.3
+    band = vocab // n_topics
+    for t in range(n_topics):
+        base = base.at[t, t * band:(t + 1) * band].add(2.0)
+    return base
+
+
+def sample_prompts(key, topics: jnp.ndarray, prompt_len: int,
+                   vocab: int, seed: int = 0) -> jnp.ndarray:
+    """topics: (B,) int32 topic id per row -> (B, prompt_len) tokens."""
+    logits = topic_logits(vocab, seed=seed)[topics]          # (B, V)
+    keys = jax.random.split(key, prompt_len)
+
+    def draw(k):
+        return jax.random.categorical(k, logits, axis=-1)
+
+    cols = jnp.stack([draw(k) for k in keys], axis=1)
+    return cols.astype(jnp.int32)
+
+
+class PromptDataset:
+    """Per-client prompt stream with a fixed topic mixture."""
+
+    def __init__(self, vocab: int, prompt_len: int, topic_probs,
+                 seed: int = 0):
+        self.vocab = vocab
+        self.prompt_len = prompt_len
+        self.topic_probs = jnp.asarray(topic_probs, jnp.float32)
+        self.seed = seed
+        self._count = 0
+
+    def next_batch(self, batch_size: int) -> jnp.ndarray:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), self._count)
+        self._count += 1
+        kt, kp = jax.random.split(key)
+        topics = jax.random.categorical(
+            kt, jnp.log(self.topic_probs + 1e-9)[None].repeat(batch_size, 0))
+        return sample_prompts(kp, topics, self.prompt_len, self.vocab,
+                              seed=self.seed)

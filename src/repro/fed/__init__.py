@@ -1,0 +1,3 @@
+from repro.fed.engine import EngineConfig, FederatedTrainer  # noqa
+
+__all__ = ["FederatedTrainer", "EngineConfig"]

@@ -1,0 +1,211 @@
+"""Federated alignment simulation engine (paper §5 experimental loop).
+
+Simulates the server + C clients protocol end-to-end at laptop scale:
+generation with the current local policy, synthetic reward scoring, the
+FIRM (or baseline) local update, FedAvg aggregation, and full metric /
+communication accounting.  Algorithms:
+
+  'firm'       — paper Alg. 1 (in-client regularized MGDA)
+  'firm_unreg' — β = 0 ablation (RQ2)
+  'fedcmoo'    — server-centric MGDA baseline (RQ1, Askin et al. 2024)
+  'linear'     — fixed-weight linear scalarization (implicit baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FIRMConfig, ModelConfig
+from repro.core import comms, drift, fedavg, fedcmoo
+from repro.data.partition import make_client_datasets
+from repro.models import transformer
+from repro.models.common import merge_trainable, split_trainable, tree_size
+from repro.rlhf import local as local_lib
+from repro.rlhf import ppo, rewards as rewards_lib
+from repro.rlhf.sampling import generate
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    algorithm: str = "firm"
+    prompt_len: int = 8
+    max_new: int = 24
+    dirichlet_alpha: float = 0.3
+    seed: int = 0
+    heterogeneous_rms: bool = False      # half the clients use the alt RM
+    fedcmoo_compress_rank: Optional[int] = None
+    linear_weights: Optional[Sequence[float]] = None
+
+
+class FederatedTrainer:
+    def __init__(self, cfg: ModelConfig, fc: FIRMConfig,
+                 ec: EngineConfig = EngineConfig()):
+        self.cfg, self.fc, self.ec = cfg, fc, ec
+        key = jax.random.PRNGKey(ec.seed)
+        self.params = transformer.init_params(cfg, key)
+        trainable, frozen = split_trainable(self.params)
+        self.frozen = frozen
+        self.ref_params = self.params                     # frozen reference
+        self.global_trainable = trainable
+        self.client_states = [
+            local_lib.init_client_state(trainable, fc.n_objectives,
+                                        cfg.d_model, fc.kl_coef_init)
+            for _ in range(fc.n_clients)]
+        self.datasets = make_client_datasets(
+            fc.n_clients, cfg.vocab, ec.prompt_len,
+            alpha=ec.dirichlet_alpha, seed=ec.seed)
+        self.reward_fns = []
+        for c in range(fc.n_clients):
+            variant = ("alt" if ec.heterogeneous_rms and
+                       c >= fc.n_clients // 2 else "default")
+            self.reward_fns.append(rewards_lib.make_reward_fns(
+                cfg.vocab, fc.n_objectives, variant=variant,
+                length_tolerance=max(4, ec.max_new // 2)))
+        self.ledger = comms.CommsLedger()
+        self.d_trainable = tree_size(trainable)
+        self.history: List[dict] = []
+        self._rng = jax.random.PRNGKey(ec.seed + 1)
+        # per-client FIRM configs (pluralistic preferences, §6 future work)
+        self._client_fcs = []
+        base_fc = self._fc_for_algorithm()
+        for c in range(fc.n_clients):
+            cfc = base_fc
+            if fc.client_preferences is not None:
+                cfc = dataclasses.replace(
+                    base_fc, preference=fc.client_preferences[c])
+            self._client_fcs.append(cfc)
+        self._jit_steps = [
+            jax.jit(partial(local_lib.firm_local_step, cfg, cfc))
+            for cfc in self._client_fcs]
+        self._jit_step = self._jit_steps[0]
+        self._jit_ref_lp = jax.jit(self._ref_logprobs)
+
+    # ------------------------------------------------------------------
+    def _fc_for_algorithm(self) -> FIRMConfig:
+        fc = self.fc
+        if self.ec.algorithm == "firm_unreg":
+            fc = dataclasses.replace(fc, beta=0.0)
+        return fc
+
+    def _ref_logprobs(self, tokens):
+        out = transformer.forward_seq(self.cfg, self.ref_params, tokens)
+        return ppo.token_logprobs(out["logits"], tokens)
+
+    def _next_key(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def _make_batch(self, c: int) -> ppo.PPOBatch:
+        prompts = self.datasets[c].next_batch(self.fc.batch_size)
+        params = merge_trainable(self.client_states[c].trainable,
+                                 self.frozen)
+        tokens, old_lp, mask = generate(self.cfg, params, prompts,
+                                        self._next_key(),
+                                        max_new=self.ec.max_new)
+        r = rewards_lib.score_batch(self.reward_fns[c], tokens, mask)
+        ref_lp = self._jit_ref_lp(tokens)
+        return ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
+
+    # ------------------------------------------------------------------
+    def _sample_participants(self) -> List[int]:
+        fc = self.fc
+        n = max(1, int(round(fc.participation * fc.n_clients)))
+        if n >= fc.n_clients:
+            return list(range(fc.n_clients))
+        idx = jax.random.choice(self._next_key(), fc.n_clients, (n,),
+                                replace=False)
+        return sorted(int(i) for i in idx)
+
+    def run_round(self) -> dict:
+        fc = self._fc_for_algorithm()
+        participants = self._sample_participants()
+        # broadcast θ_t to participating clients
+        for c in participants:
+            self.client_states[c] = self.client_states[c]._replace(
+                trainable=self.global_trainable)
+            self.ledger.send_down(self.global_trainable)
+        round_metrics = []
+        if self.ec.algorithm in ("firm", "firm_unreg"):
+            for k in range(fc.local_steps):
+                for c in participants:
+                    batch = self._make_batch(c)
+                    self.client_states[c], m = self._jit_steps[c](
+                        self.client_states[c], self.frozen, batch)
+                    m["client"] = c
+                    round_metrics.append(m)
+        elif self.ec.algorithm == "fedcmoo":
+            for k in range(fc.local_steps):
+                per_client = []
+                for c in participants:
+                    batch = self._make_batch(c)
+                    grads, losses, extras = local_lib.fedcmoo_local_grads(
+                        self.cfg, fc, self.client_states[c], self.frozen,
+                        batch)
+                    per_client.append((grads, extras, batch.rewards.mean(0)))
+                    # gradients go up every local step: the O(CMd) cost
+                    for g in grads:
+                        self.ledger.send_up(g)
+                lam = fedcmoo.fedcmoo_round_lambda(
+                    [g for g, _, _ in per_client],
+                    compress_rank=self.ec.fedcmoo_compress_rank,
+                    key=self._next_key())
+                for ci, c in enumerate(participants):
+                    grads, extras, rmean = per_client[ci]
+                    self.client_states[c], m = local_lib.fedcmoo_local_apply(
+                        fc, self.client_states[c], grads, lam, extras)
+                    m["client"] = c
+                    m["rewards"] = rmean
+                    round_metrics.append(m)
+        elif self.ec.algorithm == "linear":
+            w = jnp.asarray(self.ec.linear_weights
+                            or [1.0 / fc.n_objectives] * fc.n_objectives,
+                            jnp.float32)
+            for k in range(fc.local_steps):
+                for c in participants:
+                    batch = self._make_batch(c)
+                    grads, losses, extras = local_lib.fedcmoo_local_grads(
+                        self.cfg, fc, self.client_states[c], self.frozen,
+                        batch)
+                    self.client_states[c], m = local_lib.fedcmoo_local_apply(
+                        fc, self.client_states[c], grads, w, extras)
+                    m["client"] = c
+                    m["rewards"] = batch.rewards.mean(0)
+                    round_metrics.append(m)
+        else:
+            raise ValueError(self.ec.algorithm)
+
+        # participating clients transmit adapted params; server FedAvgs
+        for c in participants:
+            self.ledger.send_up(self.client_states[c].trainable)
+        self.global_trainable = fedavg.fedavg(
+            [self.client_states[c].trainable for c in participants])
+        self.ledger.next_round()
+
+        lams = jnp.stack([np.asarray(m["lam"]) for m in round_metrics
+                          if "lam" in m][-len(participants):])
+        summary = {
+            "rewards": np.mean(np.stack(
+                [np.asarray(m["rewards"]) for m in round_metrics]), axis=0),
+            "lam_mean": np.asarray(lams.mean(0)),
+            "lam_disagreement": float(
+                drift.lambda_disagreement(lams)["pairwise_mean"]),
+            "param_drift": float(drift.param_drift(
+                [self.client_states[c].trainable for c in participants])),
+            "kl": float(np.mean([np.asarray(m["kl"])
+                                 for m in round_metrics])),
+            "comm_bytes": self.ledger.total,
+            "participants": participants,
+            "per_client_lam": np.asarray(lams),
+        }
+        self.history.append(summary)
+        return summary
+
+    def run(self, rounds: Optional[int] = None) -> List[dict]:
+        for _ in range(rounds or self.fc.rounds):
+            self.run_round()
+        return self.history

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for FIRM's compute hot-spots.
+
+gram            — (M, d) gradient Gram matrix (MGDA input, Eq. 2)
+ssd             — Mamba2 SSD chunked scan (state resident in VMEM)
+flash_attention — GQA blockwise-softmax attention forward
+rmsnorm         — fused RMSNorm
+
+Each kernel has its pure-jnp oracle in ref.py and a dispatch wrapper in
+ops.py; validation runs in interpret mode on CPU (tests/test_kernels.py).
+"""
+from repro.kernels import ops, ref  # noqa
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: Gram matrix of M objective gradients (paper Eq. 2).
+
+The MGDA subproblem needs G_ij = <g_i, g_j> over the flattened adapter
+gradients — an (M, d) x (d, M) contraction with tiny M (2-8) and large d.
+The roofline is pure memory bandwidth (read Md floats, write M^2), so the
+kernel streams d in VMEM-sized tiles and accumulates the (M, M) product in
+an f32 VMEM block that every grid step revisits.
+
+TPU adaptation (DESIGN §3): M is padded to the 8-row sublane minimum and d
+is tiled in 128-aligned chunks so each partial product is a single
+(8, TILE_D) x (TILE_D, 8) MXU pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 8192
+M_PAD = 8
+
+
+def _gram_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # (M_PAD, TILE_D)
+    o_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram_pallas(x: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    """(M, d) -> (M, M) f32.  Pads M to 8 and d to a TILE_D multiple."""
+    m, d = x.shape
+    d_pad = -(-d // TILE_D) * TILE_D
+    xp = jnp.zeros((M_PAD, d_pad), x.dtype)
+    xp = jax.lax.dynamic_update_slice(xp, x, (0, 0))
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(d_pad // TILE_D,),
+        in_specs=[pl.BlockSpec((M_PAD, TILE_D), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((M_PAD, M_PAD), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((M_PAD, M_PAD), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:m, :m]

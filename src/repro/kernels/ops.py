@@ -1,0 +1,63 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; elsewhere (this CPU container)
+``interpret=True`` executes the kernel bodies in Python for correctness
+validation, and the model code itself uses the XLA twins in
+repro/models/attention.py (the dry-run lowers those).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gram as _gram
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """(M, d) stacked flat gradients -> (M, M) Gram matrix."""
+    if not use_pallas:
+        return ref.gram(x)
+    return _gram.gram_pallas(x, interpret=_interpret())
+
+
+def gram_from_pytrees(grads, use_pallas: bool = True) -> jnp.ndarray:
+    """List of M gradient pytrees -> (M, M); flattens then calls gram."""
+    rows = []
+    for g in grads:
+        leaves = [l.astype(jnp.float32).reshape(-1)
+                  for l in jax.tree_util.tree_leaves(g)]
+        rows.append(jnp.concatenate(leaves))
+    return gram(jnp.stack(rows), use_pallas=use_pallas)
+
+
+def flash_attention(q, k, v, *, causal=True, sliding_window=0,
+                    use_pallas: bool = True, **kw):
+    if not use_pallas:
+        return ref.flash_attention(q, k, v, causal=causal,
+                                   sliding_window=sliding_window)
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               sliding_window=sliding_window,
+                               interpret=_interpret(), **kw)
+
+
+def rmsnorm(x, g, eps: float = 1e-5, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.rmsnorm(x, g, eps)
+    return _rn.rmsnorm(x, g, eps=eps, interpret=_interpret())
+
+
+def ssd_scan(x, bmat, cmat, dt, da, *, chunk: int = 128,
+             use_pallas: bool = True):
+    """Chunked Mamba2 SSD scan: (BH,S,hd) x (BH,S,ds) etc -> (BH,S,hd)."""
+    if not use_pallas:
+        return ref.ssd_scan(x, bmat, cmat, dt, da)
+    from repro.kernels import ssd as _ssd
+    return _ssd.ssd_scan(x, bmat, cmat, dt, da, chunk=chunk,
+                         interpret=_interpret())

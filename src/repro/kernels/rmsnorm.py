@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused RMSNorm (+ scale).
+
+Rows are tiled in VMEM-sized blocks with the full feature dimension
+resident, so the variance reduction, rsqrt and scale happen in one pass
+without an HBM round-trip for the intermediate.  Block rows default to
+128 (f32 working set at d=12288: 128*12288*4 ≈ 6.3 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                  # (R, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y.astype(o_ref.dtype) * g_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5,
+            block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """x: (..., d), g: (d,) -> same shape as x."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = -(-rows // block_rows) * block_rows - rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(x2.shape[0] // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, g)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (zamba2's hot-spot).
+
+One grid step processes one (batch*head, chunk) tile: the intra-chunk
+decay-masked quadratic form runs on the MXU, and the (hd, ds) SSM state is
+carried across the chunk grid dimension in VMEM scratch — the state never
+round-trips HBM between chunks (the fused structure of the reference CUDA
+kernel, re-blocked for VMEM; DESIGN §3).
+
+Grid = (B*nh, n_chunks) with chunk-major iteration inside each head;
+B/C projections are shared across heads (ngroups=1), expressed in the
+BlockSpec index maps.  Tile dims (chunk=128, hd=64, ds=64) keep the MXU
+contractions 64/128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, o_ref, state_ref, *,
+                chunk, nh):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (chunk, hd)
+    bmat = b_ref[0].astype(jnp.float32)       # (chunk, ds)
+    cmat = c_ref[0].astype(jnp.float32)       # (chunk, ds)
+    dt = dt_ref[0].astype(jnp.float32)        # (chunk, 1)
+    da = da_ref[0].astype(jnp.float32)        # (chunk, 1)
+
+    L = jnp.cumsum(da, axis=0)                # (chunk, 1) inclusive
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ldiff = L - L.reshape(1, chunk)           # L_i - L_j
+    decay = jnp.exp(jnp.where(ii >= jj, ldiff, NEG_INF))
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = cb * decay * dt.reshape(1, chunk)
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state = state_ref[...]                    # (hd, ds)
+    y_inter = jax.lax.dot_general(cmat, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) * \
+        jnp.exp(L)
+    o_ref[0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+    # state update to chunk end
+    decay_end = jnp.exp(L[-1] - L)            # (chunk, 1)
+    w = dt * decay_end                        # (chunk, 1)
+    state_new = jax.lax.dot_general(x * w, bmat, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    state_ref[...] = state * jnp.exp(L[-1]) + state_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, bmat, cmat, dt, da, *, chunk: int = 128,
+             interpret: bool = False):
+    """Chunked SSD over heads.
+
+    x: (BH, S, hd); bmat/cmat: (BH, S, ds); dt/da: (BH, S).
+    Returns y: (BH, S, hd)  (h_t = exp(da_t) h_{t-1} + dt_t x_t B_t^T;
+    y_t = C_t . h_t).
+    """
+    bh, s, hd = x.shape
+    ds = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "pad sequence to the chunk size"
+    n = s // chunk
+    dt2 = dt[..., None]
+    da2 = da[..., None]
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nh=1)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda h, j: (h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, bmat, cmat, dt2, da2)
+    return out

@@ -1,0 +1,6 @@
+from repro.launch import mesh, sharding, specs, steps  # noqa
+# NOTE: repro.launch.dryrun is intentionally NOT imported here — it sets
+# XLA_FLAGS for 512 host devices at import time and must only be run as
+# ``python -m repro.launch.dryrun``.
+
+__all__ = ["mesh", "sharding", "specs", "steps"]

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+For each pair this proves the sharding config is coherent (no sharding
+mismatch, no unsupported collective, memory accounted) and extracts the
+roofline terms from the compiled artifact:
+
+  compute_s    = HLO_FLOPs_per_device / 197e12        (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+  collective_s = collective_bytes_per_device / 50e9   (ICI per link)
+
+cost_analysis() reports PER-DEVICE numbers for the SPMD module (verified
+against a hand-computed einsum); collective bytes are parsed from the
+compiled HLO (operand sizes of all-reduce/all-gather/reduce-scatter/
+all-to-all/collective-permute).
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out runs/dryrun.json
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import FIRMConfig
+from repro.launch import hlo_cost
+from repro.launch import sharding as sh
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(ty: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(ty, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (per-device) HLO."""
+    # name -> result bytes, from definition lines "  %name = f32[...]"
+    def_bytes = {}
+    for m in re.finditer(r"%([\w\.\-]+) = ([\w]+)\[([\d,]*)\]", hlo_text):
+        def_bytes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+    totals = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w\.\-]+ = [\w]+\[[\d,]*\][^=]*? "
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        counts[op] += 1
+        # operand shapes: prefer typed operands inside the call parens
+        call = stripped[m.end() - 1:]
+        shapes = _SHAPE_RE.findall(call.split(")", 1)[0])
+        if shapes:
+            totals[op] += sum(_shape_bytes(t, d) for t, d in shapes)
+        else:
+            # fall back: operand names -> their definition sizes
+            ops = re.findall(r"%([\w\.\-]+)", call.split(")", 1)[0])
+            got = [def_bytes.get(o) for o in ops if o in def_bytes]
+            if got:
+                totals[op] += sum(got)
+    return {"bytes_by_op": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def _shardings_for(kind, cfg, shape, mesh, spec, multi_pod, fc):
+    tp = cfg.tensor_parallel
+    # pure DP (tp off): the batch rides BOTH mesh axes — the model axis
+    # must not duplicate work
+    data_axes = ("data",) if tp else ("data", "model")
+    if multi_pod:
+        data_axes = ("pod",) + data_axes
+    if kind == "train":
+        if multi_pod:
+            state_sh = sh.param_shardings(spec["state"], mesh,
+                                          extra_leading=1,
+                                          leading_axis="pod",
+                                          tensor_parallel=tp)
+            b_axes = ("data",) if tp else ("data", "model")
+            batch_sh = sh.batch_shardings(spec["batch"], mesh,
+                                          extra_leading_axes=("pod", None),
+                                          data_axes=b_axes)
+            aux_sh = (sh.batch_shardings(spec["aux"], mesh,
+                                         extra_leading_axes=("pod", None),
+                                         data_axes=b_axes)
+                      if spec["aux"] is not None else None)
+        else:
+            state_sh = sh.param_shardings(spec["state"], mesh,
+                                          tensor_parallel=tp)
+            batch_sh = sh.batch_shardings(spec["batch"], mesh,
+                                          data_axes=data_axes)
+            aux_sh = (sh.batch_shardings(spec["aux"], mesh,
+                                         data_axes=data_axes)
+                      if spec["aux"] is not None else None)
+        frozen_sh = sh.param_shardings(spec["frozen"], mesh,
+                                       tensor_parallel=tp)
+        return (state_sh, frozen_sh, batch_sh, aux_sh)
+    if kind == "prefill":
+        p_sh = sh.param_shardings(spec["params"], mesh, tensor_parallel=tp)
+        t_sh = sh.batch_shardings(spec["tokens"], mesh, data_axes=data_axes)
+        a_sh = (sh.batch_shardings(spec["aux"], mesh, data_axes=data_axes)
+                if spec["aux"] is not None else None)
+        return (p_sh, t_sh, a_sh)
+    p_sh = sh.param_shardings(spec["params"], mesh, tensor_parallel=tp)
+    c_sh = sh.cache_shardings(cfg, spec["cache"], mesh,
+                              shape.global_batch, data_axes=data_axes)
+    t_sh = sh.batch_shardings(spec["token"], mesh, data_axes=data_axes)
+    return (p_sh, c_sh, t_sh)
+
+
+def _multi_pod_train_spec(cfg, fc, shape, n_pods=2):
+    """Pod-stacked ClientState + (pods, K, B/pods, ...) batches."""
+    import dataclasses
+    per_pod = dataclasses.replace(shape,
+                                  global_batch=max(1, shape.global_batch
+                                                   // n_pods))
+    base = specs_lib.input_specs(cfg, per_pod, fc)
+
+    def stack(tree, lead):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype), tree)
+
+    return {
+        "kind": "train",
+        "state": stack(base["state"], (n_pods,)),
+        "frozen": base["frozen"],
+        "batch": stack(base["batch"], (n_pods, fc.local_steps)),
+        "aux": (stack(base["aux"], (n_pods, fc.local_steps))
+                if base["aux"] is not None else None),
+    }
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             fc: FIRMConfig, overrides=None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "ok"}
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch; long_500k needs sub-quadratic" \
+            " attention (DESIGN §4)"
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    if multi_pod and shape.kind == "train":
+        spec = _multi_pod_train_spec(cfg, fc, shape)
+        fn = steps_lib.make_federated_round(cfg, fc, n_pods=2)
+        args = (spec["state"], spec["frozen"], spec["batch"], spec["aux"])
+    else:
+        spec = specs_lib.input_specs(cfg, shape, fc)
+        fn, args = steps_lib.step_and_args(cfg, shape.kind, fc, spec)
+    in_sh = _shardings_for(spec["kind"], cfg, shape, mesh, spec,
+                           multi_pod, fc)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    # loop-aware walker: cost_analysis() counts while bodies once (see
+    # hlo_cost docstring) — useless for scan-over-layers models.
+    walked = hlo_cost.analyze(hlo)
+    coll = {"bytes_by_op": {k: v["bytes"] for k, v
+                            in walked["collectives"].items()},
+            "counts": {k: v["count"] for k, v
+                       in walked["collectives"].items()},
+            "total_bytes": walked["collective_bytes"]}
+    flops_dev = float(walked["flops"])
+    bytes_dev = float(walked["bytes"])
+    coll_dev = float(walked["collective_bytes"])
+    # MODEL_FLOPS = 6 N D (6 N_active D for MoE)
+    n_active = cfg.param_count(active_only=True)
+    dec_len, enc_len = specs_lib.seq_lens(cfg, shape)
+    tokens = shape.global_batch * (dec_len if shape.kind != "decode" else 1)
+    fwd_bwd = 1.0 if shape.kind != "train" else 3.0
+    model_flops = 2.0 * n_active * tokens * fwd_bwd  # 2ND fwd, 6ND train
+    if shape.kind == "train":
+        model_flops *= fc.local_steps if multi_pod else 1
+    rec.update({
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "xla_cost_analysis": {          # loop-body-once numbers, reference
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "roofline": {
+            "compute_s": flops_dev / PEAK_FLOPS_BF16,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll_dev / ICI_BW_PER_LINK,
+        },
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flop_ratio": (model_flops / n_dev) / max(flops_dev, 1.0),
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+    })
+    r = rec["roofline"]
+    rec["dominant_term"] = max(r, key=r.get)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun.json")
+    ap.add_argument("--objectives", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, e.g. mlstm_chunk=64")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.override)
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    fc = FIRMConfig(n_objectives=args.objectives,
+                    local_steps=args.local_steps)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                key = (arch, shape_name, "2x16x16" if mp else "16x16")
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_pair(arch, shape_name, mp, fc, overrides)
+                    if overrides:
+                        rec["overrides"] = overrides
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": key[2], "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"dom={rec['dominant_term']}")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[{status}] {key}{extra}", flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Production mesh construction (MULTI-POD DRY-RUN step 1).
+
+A *function*, not a module-level constant — importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips of
+TPU v5e.  Multi-pod: (pod=2, data=16, model=16) = 512 chips, where the
+'pod' axis carries the federated clients (DESIGN §3): K FIRM local steps
+run with zero cross-pod traffic and FedAvg is one all-reduce over 'pod'.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """A 1-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants for the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link

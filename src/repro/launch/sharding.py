@@ -1,0 +1,211 @@
+"""Partition-spec derivation for params, optimizer state, batches, caches.
+
+Megatron-style tensor parallelism on the 'model' axis: column-parallel
+input projections (wq/wk/wv/gate/up/in_proj), row-parallel output
+projections (wo/down/out_proj), vocab-sharded embedding/lm_head,
+expert-parallel MoE stacks (falling back to d_ff tensor parallelism when
+n_experts doesn't divide the axis).  Batch dims ride the 'data' axis.
+Every rule is guarded by divisibility — dims that don't divide the mesh
+axis are replicated instead (GSPMD correctness is unaffected; the roofline
+shows the cost).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# projection-name classes (the dict key *above* the 'w' leaf)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_if", "w_o",
+        "router", "w", "r"}          # output-dim sharded
+_ROW = {"wo", "w_down", "out_proj"}  # input-dim sharded
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(mesh.shape).get(name, 1)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _path_names(path):
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def param_spec(path, leaf, mesh, *, extra_leading: int = 0) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    extra_leading: number of leading axes prepended outside the model
+    (e.g. a client/pod stacking axis handled by the caller).
+    """
+    names = _path_names(path)
+    msize = _axis_size(mesh, "model")
+    nd = leaf.ndim - extra_leading
+    stacked = "slots" in names                 # scan-stacked leading axis
+    base = 1 if stacked else 0                 # first real weight dim
+    spec = [None] * leaf.ndim
+
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+
+    def setax(dim, axis="model"):
+        if _div(leaf.shape[extra_leading + dim], _axis_size(mesh, axis)):
+            spec[extra_leading + dim] = axis
+
+    if name in ("lora_A", "lora_B"):
+        pass                                    # adapters replicated (tiny)
+    elif name == "embed":
+        setax(0)                                # vocab-sharded
+    elif parent == "lm_head":
+        setax(nd - 1)
+    elif parent == "experts" or (len(names) >= 3 and names[-3] == "experts"):
+        # stacked expert weights: (stack?, E, d, f). Prefer expert parallel.
+        e_dim = base
+        if _div(leaf.shape[extra_leading + e_dim], msize):
+            spec[extra_leading + e_dim] = "model"
+        else:                                   # fall back: shard d_ff
+            ff_dim = nd - 1 if name in ("w_gate", "w_up") else nd - 2
+            setax(ff_dim)
+    elif name == "w" and parent in _COL:
+        setax(nd - 1)
+    elif name == "w" and parent in _ROW:
+        setax(base)
+    elif name in ("conv_w", "conv_b"):
+        setax(nd - 1)
+    # norms / gates / scalars / A_log / D / dt_bias / critic stay replicated
+    return P(*spec)
+
+
+def param_shardings(tree, mesh, *, extra_leading: int = 0,
+                    leading_axis: Optional[str] = None,
+                    tensor_parallel: bool = True):
+    """NamedSharding tree for a param pytree (None leaves pass through)."""
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        if not tensor_parallel:
+            spec = P(*([None] * leaf.ndim))
+        else:
+            spec = param_spec(path, leaf, mesh, extra_leading=extra_leading)
+        if leading_axis is not None:
+            parts = list(spec) + [None] * (leaf.ndim - len(spec))
+            parts[0] = leading_axis
+            spec = P(*parts)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def rep_tree(tree, mesh, leading_axis: Optional[str] = None):
+    def one(leaf):
+        if leaf is None:
+            return None
+        if leading_axis is not None and getattr(leaf, "ndim", 0) >= 1:
+            return NamedSharding(
+                mesh, P(*([leading_axis] + [None] * (leaf.ndim - 1))))
+        return replicated(mesh)
+    return jax.tree_util.tree_map(one, tree)
+
+
+# ------------------------------------------------------------------ batches
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def batch_spec(shape_tuple, mesh, *, extra_leading_axes=(),
+               data_axes=("data",)) -> P:
+    """Shard dim0 (batch) on the data axes when divisible; else rep."""
+    dsize = _axes_size(mesh, data_axes)
+    lead = list(extra_leading_axes)
+    rest = shape_tuple[len(lead):]
+    d_ax = data_axes if len(data_axes) > 1 else data_axes[0]
+    spec = lead + [(d_ax if _div(rest[0], dsize) else None)] + \
+        [None] * (len(rest) - 1)
+    return P(*spec)
+
+
+def batch_shardings(tree_of_sds, mesh, *, extra_leading_axes=(),
+                    data_axes=("data",)):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(
+            mesh, batch_spec(s.shape, mesh,
+                             extra_leading_axes=extra_leading_axes,
+                             data_axes=data_axes)),
+        tree_of_sds)
+
+
+# ------------------------------------------------------------------- caches
+def cache_shardings(cfg: ModelConfig, cache_tree, mesh, batch: int,
+                    data_axes=("data",)):
+    """Decode-cache shardings: batch -> data axes, long KV seq -> 'model'
+    (context-parallel decode); recurrent-state heads -> 'model'.
+
+    When batch doesn't divide the data axes (long_500k has B=1), the KV
+    sequence is sharded over ALL axes instead.
+    """
+    dsize = _axes_size(mesh, data_axes)
+    msize = _axis_size(mesh, "model")
+    b_ok = _div(batch, dsize)
+    d_ax = data_axes if len(data_axes) > 1 else data_axes[0]
+    all_ax = tuple(data_axes) + ("model",)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = leaf.ndim
+        spec = [None] * nd
+        stacked = "slots" in names
+        off = 1 if stacked else 0               # skip the periods axis
+        if name in ("k", "v", "ck", "cv"):      # (P, B, C, Hkv, Dh)
+            c = leaf.shape[off + 1]
+            if b_ok:
+                spec[off] = d_ax
+                if _div(c, msize):
+                    spec[off + 1] = "model"
+            else:
+                if _div(c, dsize * msize):
+                    spec[off + 1] = all_ax
+                elif _div(c, msize):
+                    spec[off + 1] = "model"
+        elif name == "conv":                    # (P, B, K, C)
+            if b_ok:
+                spec[off] = d_ax
+        elif name == "state":                   # (P, B, nh, hd, ds)
+            if b_ok:
+                spec[off] = d_ax
+            if _div(leaf.shape[off + 1], msize):
+                spec[off + 1] = "model"
+        elif name == "C":                       # (P, B, H, Dh, Dh)
+            if b_ok:
+                spec[off] = d_ax
+            if _div(leaf.shape[off + 1], msize):
+                spec[off + 1] = "model"
+        elif name in ("n", "m", "c", "h"):      # (P, B, ...) states
+            if b_ok:
+                spec[off] = d_ax
+        # 'pos' scalar: replicated
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

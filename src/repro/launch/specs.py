@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct stand-ins for every lowered entry point
+(MULTI-POD DRY-RUN step 2): weak-type-correct, shardable, no allocation.
+
+``input_specs(cfg, shape, fc)`` returns the full argument pytree for the
+step implied by the shape kind:
+  train_4k    -> firm train step  (ClientState, frozen params, PPOBatch, aux)
+  prefill_32k -> prefill          (params, tokens, aux)
+  decode_*    -> serve step       (params, cache, token)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FIRMConfig, InputShape, ModelConfig
+from repro.models import transformer
+from repro.models.common import split_trainable
+from repro.rlhf import local as local_lib
+from repro.rlhf.ppo import PPOBatch
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def seq_lens(cfg: ModelConfig, shape: InputShape):
+    """(decoder_len, encoder/cross_len) for this arch at this shape."""
+    if cfg.is_encoder_decoder:
+        enc = shape.seq_len // cfg.encoder_len_ratio
+        dec = max(8, shape.seq_len // cfg.decoder_len_ratio)
+        return dec, enc
+    if cfg.family == "vlm":
+        return shape.seq_len, cfg.n_vision_tokens
+    return shape.seq_len, 0
+
+
+def aux_specs(cfg: ModelConfig, batch: int, cross_len: int,
+              dtype=jnp.bfloat16) -> Optional[dict]:
+    """Modality-stub inputs (DESIGN §4 carve-out)."""
+    if cfg.family == "vlm":
+        return {"vision": sds((batch, cross_len, cfg.d_model), dtype)}
+    if cfg.is_encoder_decoder:
+        return {"frames": sds((batch, cross_len, cfg.d_model), dtype)}
+    return None
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    key = sds((2,), jnp.uint32)
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg, dtype=dtype), key)
+
+
+def state_specs(cfg: ModelConfig, fc: FIRMConfig, dtype=jnp.bfloat16):
+    """(ClientState specs, frozen specs) via eval_shape — no allocation."""
+    params = param_specs(cfg, dtype)
+
+    def build(params):
+        trainable, frozen = split_trainable(params)
+        state = local_lib.init_client_state(trainable, fc.n_objectives,
+                                            cfg.d_model, fc.kl_coef_init)
+        return state, frozen
+
+    return jax.eval_shape(build, params)
+
+
+def train_batch_specs(cfg: ModelConfig, fc: FIRMConfig, shape: InputShape):
+    b = shape.global_batch
+    s, cross = seq_lens(cfg, shape)
+    batch = PPOBatch(
+        tokens=sds((b, s), jnp.int32),
+        response_mask=sds((b, s), jnp.float32),
+        old_logprobs=sds((b, s), jnp.float32),
+        ref_logprobs=sds((b, s), jnp.float32),
+        rewards=sds((b, fc.n_objectives), jnp.float32),
+    )
+    return batch, aux_specs(cfg, b, cross)
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    s, cross = seq_lens(cfg, shape)
+    return sds((b, s), jnp.int32), aux_specs(cfg, b, cross)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    b = shape.global_batch
+    s, cross = seq_lens(cfg, shape)
+    return jax.eval_shape(functools.partial(
+        transformer.init_cache, cfg, b, s, dtype,
+        n_cross=cross))
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    return param_specs(cfg), cache_specs(cfg, shape), sds((b, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                fc: Optional[FIRMConfig] = None) -> dict:
+    """Every input of the step lowered for this (arch, shape) pair."""
+    fc = fc or FIRMConfig()
+    if shape.kind == "train":
+        state, frozen = state_specs(cfg, fc)
+        batch, aux = train_batch_specs(cfg, fc, shape)
+        return {"kind": "train", "state": state, "frozen": frozen,
+                "batch": batch, "aux": aux}
+    if shape.kind == "prefill":
+        tokens, aux = prefill_specs(cfg, shape)
+        return {"kind": "prefill", "params": param_specs(cfg),
+                "tokens": tokens, "aux": aux}
+    params, cache, token = decode_specs(cfg, shape)
+    return {"kind": "decode", "params": params, "cache": cache,
+            "token": token}

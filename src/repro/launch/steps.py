@@ -1,0 +1,96 @@
+"""Jittable step functions lowered by the dry-run and the drivers.
+
+  make_train_step       — one FIRM client-local update (PPO x M -> MGDA ->
+                          Adam) at full scale under (data, model)
+  make_prefill_step     — sequence forward + KV/state harvest, last logits
+  make_serve_step       — one decode token against the cache
+  make_federated_round  — MULTI-POD: clients stacked on the 'pod' axis,
+                          K local steps per client (lax.scan), then FedAvg
+                          as a mean over the pod-stacked axis — GSPMD turns
+                          it into the single cross-pod all-reduce of the
+                          adapters that the paper's O(Cd) analysis promises.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FIRMConfig, ModelConfig
+from repro.models import transformer
+from repro.rlhf import local as local_lib
+from repro.rlhf.ppo import PPOBatch
+
+
+def _small_metrics(m: dict) -> dict:
+    """Keep only O(M) metric outputs (drop any big tensors)."""
+    keep = ("losses", "lam", "lam_star", "gram", "kl", "grad_norm",
+            "td_err", "ratio_mean")
+    return {k: m[k] for k in keep if k in m}
+
+
+def make_train_step(cfg: ModelConfig, fc: FIRMConfig):
+    def train_step(state, frozen, batch: PPOBatch, aux=None):
+        new_state, metrics = local_lib.firm_local_step(
+            cfg, fc, state, frozen, batch, aux)
+        return new_state, _small_metrics(metrics)
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, aux=None):
+        logits, cache = transformer.prefill(cfg, params, tokens, aux)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return transformer.decode_step(cfg, params, cache, token)
+    return serve_step
+
+
+def make_federated_round(cfg: ModelConfig, fc: FIRMConfig, n_pods: int):
+    """stacked_state: ClientState with a leading (n_pods,) axis on every
+    leaf; batches: PPOBatch with leading (n_pods, K) axes; frozen shared.
+    """
+    def client_k_steps(state, batches, aux_seq, frozen):
+        def body(s, xs):
+            b, a = xs
+            s, m = local_lib.firm_local_step(cfg, fc, s, frozen, b, a)
+            return s, _small_metrics(m)
+        if aux_seq is None:
+            def body_noaux(s, b):
+                return body(s, (b, None))
+            return jax.lax.scan(body_noaux, state, batches)
+        return jax.lax.scan(body, state, (batches, aux_seq))
+
+    def federated_round(stacked_state, frozen, stacked_batches, aux=None):
+        # aux (modality stubs) is stacked (pods, K, ...) like the batches
+        new_states, metrics = jax.vmap(
+            client_k_steps,
+            in_axes=(0, 0, None if aux is None else 0, None))(
+            stacked_state, stacked_batches, aux, frozen)
+        # FedAvg: the ONLY cross-pod collective of the round (O(Cd))
+        avg = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True),
+                                       x.shape),
+            new_states.trainable)
+        return new_states._replace(trainable=avg), metrics
+
+    return federated_round
+
+
+def step_and_args(cfg: ModelConfig, shape_kind: str, fc: FIRMConfig,
+                  spec: dict):
+    """(fn, ordered args) for the entry point implied by the shape kind."""
+    if shape_kind == "train":
+        return (make_train_step(cfg, fc),
+                (spec["state"], spec["frozen"], spec["batch"], spec["aux"]))
+    if shape_kind == "prefill":
+        return (make_prefill_step(cfg),
+                (spec["params"], spec["tokens"], spec["aux"]))
+    return (make_serve_step(cfg),
+            (spec["params"], spec["cache"], spec["token"]))

@@ -1,0 +1,7 @@
+from repro.models import attention, common, moe, ssm, transformer, xlstm  # noqa
+from repro.models.transformer import (decode_step, forward_seq, init_cache,
+                                      init_params, prefill)
+
+__all__ = ["attention", "common", "moe", "ssm", "transformer", "xlstm",
+           "init_params", "forward_seq", "prefill", "decode_step",
+           "init_cache"]

@@ -1,0 +1,130 @@
+"""GQA attention: full-causal, sliding-window, bidirectional and cross.
+
+The sequence path uses a *chunked online-softmax* formulation (lax.scan over
+KV blocks) so peak activation memory is O(S * block) instead of O(S^2) —
+this is the XLA twin of the Pallas flash-attention kernel in
+``repro/kernels/flash_attention.py`` and is what the multi-pod dry-run
+lowers (Pallas has no CPU lowering path).
+
+GQA is expressed as a grouped einsum — queries are reshaped to
+(B, S, Hkv, G, Dh) and contracted directly against the (B, S, Hkv, Dh)
+keys/values.  The repeated-KV tensor is never materialised: this keeps the
+decode KV cache shardable on its head dim without GSPMD "involuntary full
+rematerialization" copies (observed when broadcasting sharded KV heads).
+
+Decode path attends one query position against a pre-allocated KV cache
+(ring buffer for sliding-window attention).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_q(q: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    """(B, S, Hq, Dh) -> (B, S, Hkv, G, Dh)."""
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, dh)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, sliding_window: int = 0,
+                      block: int = 512,
+                      q_positions: Optional[jnp.ndarray] = None,
+                      kv_positions: Optional[jnp.ndarray] = None
+                      ) -> jnp.ndarray:
+    """Online-softmax attention over KV blocks.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh).  Returns (B, Sq, Hq, Dh).
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+
+    scale = dh ** -0.5
+    qf = _group_q(q, hkv) * scale                        # (B,Sq,Hkv,G,Dh)
+    g = qf.shape[3]
+    block = min(block, skv)
+    n_blocks = max(1, -(-skv // block))
+    pad = n_blocks * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad),
+                               constant_values=skv + sliding_window + sq + 1)
+
+    # storage dtype in HBM; f32 accumulation on the MXU
+    kb = k.reshape(b, n_blocks, block, hkv, dh)
+    vb = v.reshape(b, n_blocks, block, hkv, dh)
+    pb = kv_positions.reshape(n_blocks, block)
+
+    def body(carry, xs):
+        acc, m, l = carry          # (B,Sq,Hkv,G,Dh), (B,Sq,Hkv,G), (same)
+        kblk, vblk, pos = xs       # (B,block,Hkv,Dh), (block,)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kblk,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((sq, block), bool)
+        if causal:
+            mask &= q_positions[:, None] >= pos[None, :]
+        if sliding_window:
+            mask &= q_positions[:, None] - pos[None, :] < sliding_window
+        mask &= (pos < skv + sliding_window + sq)[None, :]  # padding
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + \
+            jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+                       preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    init = (jnp.zeros((b, sq, hkv, g, dh), jnp.float32),
+            jnp.full((b, sq, hkv, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, sq, hkv, g), jnp.float32))
+    if n_blocks == 1:
+        (acc, m, l), _ = body(init, (kb[:, 0], vb[:, 0], pb[0]))
+    else:
+        (acc, m, l), _ = jax.lax.scan(
+            body, init, (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
+                     sliding_window: int = 0,
+                     cache_positions: Optional[jnp.ndarray] = None
+                     ) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: (B, 1, Hq, Dh); caches: (B, C, Hkv, Dh); pos: scalar current position.
+    For SWA the cache is a ring buffer of size C == window and
+    ``cache_positions`` (C,) holds each slot's absolute position
+    (-1 marks an unwritten slot).
+    """
+    b, _, hq, dh = q.shape
+    c, hkv = k_cache.shape[1], k_cache.shape[2]
+    # keep the cache in its storage dtype; accumulate the dot in f32
+    # (an explicit .astype(f32) makes XLA materialise a full f32 copy of
+    # the cache outside the decode loop — 2x HBM traffic for nothing)
+    qf = _group_q(q, hkv) * dh ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k_cache,
+                   preferred_element_type=jnp.float32)  # (B,1,Hkv,G,C)
+    if cache_positions is None:
+        cache_positions = jnp.arange(c)
+    valid = (cache_positions >= 0) & (cache_positions <= pos)
+    if sliding_window:
+        valid &= pos - cache_positions < sliding_window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)

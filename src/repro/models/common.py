@@ -1,0 +1,135 @@
+"""Shared model primitives: RMSNorm, RoPE, SwiGLU, LoRA-aware projections.
+
+Parameters are plain nested dicts of jnp arrays ("param trees").  A linear
+projection is a dict ``{'w': (din, dout)}`` optionally carrying LoRA factors
+``{'lora_A': (din, r), 'lora_B': (r, dout)}``.  LoRA factors are the only
+trainable leaves in federated mode (paper trains/communicates adapters only).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+Param = dict  # nested dict pytree of jnp arrays
+
+
+# --------------------------------------------------------------------- init
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, din: int, dout: int, *, lora_rank: int = 0,
+                dtype=jnp.bfloat16, scale: Optional[float] = None) -> Param:
+    scale = scale if scale is not None else 1.0 / math.sqrt(din)
+    p = {"w": _normal(key, (din, dout), scale, dtype)}
+    if lora_rank:
+        ka, _ = jax.random.split(key)
+        # A ~ N(0, 1/r), B = 0 (standard LoRA init: adapter starts at zero)
+        p["lora_A"] = _normal(ka, (din, lora_rank), 1.0 / math.sqrt(din),
+                              jnp.float32)
+        p["lora_B"] = jnp.zeros((lora_rank, dout), jnp.float32)
+    return p
+
+
+def init_norm(d: int, dtype=jnp.bfloat16) -> Param:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+# ------------------------------------------------------------------ forward
+def linear(p: Param, x: jnp.ndarray, *, lora_alpha: float = 32.0) -> jnp.ndarray:
+    """x @ w (+ LoRA path).  x: (..., din) -> (..., dout)."""
+    y = x @ p["w"]
+    if "lora_A" in p:
+        r = p["lora_A"].shape[-1]
+        z = (x.astype(jnp.float32) @ p["lora_A"]) @ p["lora_B"]
+        y = y + (lora_alpha / r) * z.astype(y.dtype)
+    return y
+
+
+def rms_norm(p: Param, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+def swiglu(p: Param, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: p has 'w_gate', 'w_up', 'w_down'."""
+    g = linear(p["w_gate"], x)
+    u = linear(p["w_up"], x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return linear(p["w_down"], h)
+
+
+def init_swiglu(key, d: int, dff: int, dtype=jnp.bfloat16) -> Param:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, d, dff, dtype=dtype),
+        "w_up": init_linear(k2, d, dff, dtype=dtype),
+        "w_down": init_linear(k3, dff, d, dtype=dtype,
+                              scale=1.0 / math.sqrt(dff)),
+    }
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    if ang.ndim == 2:                                   # (S, Dh/2) -> broadcast
+        ang = ang[None]                                 # (1, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]                   # (B|1, S, 1, Dh/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- pytrees
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def is_lora_path(path) -> bool:
+    return any(getattr(k, "key", None) in ("lora_A", "lora_B") for k in path)
+
+
+def split_trainable(params, full_params_mode: bool = False):
+    """Split params into (trainable, frozen) trees with None placeholders.
+
+    In LoRA mode trainable = the lora_A/lora_B leaves (paper: adapters only).
+    In full mode everything is trainable.
+    """
+    if full_params_mode:
+        return params, jax.tree_util.tree_map(lambda _: None, params)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    has_lora = any(is_lora_path(p) for p, _ in flat)
+    if not has_lora:            # e.g. xlstm: no adapters -> full-param FIRM
+        return params, jax.tree_util.tree_map(lambda _: None, params)
+    train = jax.tree_util.tree_map_with_path(
+        lambda p, x: x if is_lora_path(p) else None, params)
+    frozen = jax.tree_util.tree_map_with_path(
+        lambda p, x: None if is_lora_path(p) else x, params)
+    return train, frozen
+
+
+def merge_trainable(train, frozen):
+    return jax.tree_util.tree_map(
+        lambda a, b: a if a is not None else b, train, frozen,
+        is_leaf=lambda x: x is None)

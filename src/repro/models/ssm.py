@@ -1,0 +1,170 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Training/prefill uses the *chunked* SSD algorithm: within a chunk the
+output is a decay-masked quadratic form (attention-like, MXU friendly);
+across chunks a (B, nh, hd, dstate) state is carried through a lax.scan.
+Peak memory is O(S * chunk) instead of the O(S * hd * dstate) blow-up of a
+naive associative scan.  Decode is the exact single-step recurrence.
+
+Adaptation note (DESIGN §3): the reference CUDA kernel fuses the chunk
+scan; here the chunk body is plain einsum so the MXU executes the
+(chunk x chunk) and (chunk x dstate) contractions, and the cross-chunk
+recurrence is a sequential lax.scan of tiny state tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+def dims(cfg: ModelConfig):
+    din = cfg.ssm_expand * cfg.d_model
+    nheads = max(1, din // cfg.ssm_head_dim)
+    return din, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    din, nh, hd, ds = dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = din + 2 * ds
+    return {
+        "ln": common.init_norm(d, dtype),
+        # in_proj -> [z(din), x(din), B(ds), C(ds), dt(nh)]
+        "in_proj": common.init_linear(ks[0], d, 2 * din + 2 * ds + nh,
+                                      dtype=dtype),
+        "conv_w": common._normal(ks[1], (cfg.conv_dim, conv_ch),
+                                 1.0 / cfg.conv_dim, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": common.init_linear(ks[2], din, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    din, nh, hd, ds = dims(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * ds]
+    dt = zxbcdt[..., din + din + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32))
+
+
+def mamba2_seq(p, cfg: ModelConfig, x: jnp.ndarray,
+               return_state: bool = False):
+    """Full-sequence forward.  x: (B, S, d) -> (B, S, d) [, final cache]."""
+    din, nh, hd, ds = dims(cfg)
+    b, s, _ = x.shape
+    h = common.rms_norm(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _split_proj(cfg, common.linear(p["in_proj"], h))
+    xbc_raw = xbc                                              # pre-conv (cache)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])          # (B,S,din+2ds) f32
+    xs = xbc[..., :din].reshape(b, s, nh, hd)
+    B = xbc[..., din:din + ds]                                  # (B,S,ds)
+    C = xbc[..., din + ds:]                                     # (B,S,ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                    # (nh,) < 0
+    dA = dt * A                                                 # (B,S,nh) log-decay
+
+    chunk = cfg.ssm_chunk
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+    cs = nchunks
+
+    def rs(t, extra):  # (B, S', ...) -> (cs, B, chunk, ...)
+        return jnp.moveaxis(t.reshape((b, cs, chunk) + extra), 1, 0)
+
+    xs_c, B_c, C_c = rs(xs, (nh, hd)), rs(B, (ds,)), rs(C, (ds,))
+    dt_c, dA_c = rs(dt, (nh,)), rs(dA, (nh,))
+
+    def body(state, xs_):
+        xck, bck, cck, dtk, dak = xs_      # per-chunk tensors
+        # cumulative log decay within chunk, inclusive: L (B, CHUNK, nh)
+        L = jnp.cumsum(dak, axis=1)
+        # intra-chunk: scores[i,j] = (C_i . B_j) * exp(L_i - L_j) * dt_j, i>=j
+        cb = jnp.einsum("bis,bjs->bij", cck, bck)              # (B,Ck,Ck)
+        ii = jnp.arange(chunk)
+        causal = ii[:, None] >= ii[None, :]
+        ldiff = L[:, :, None, :] - L[:, None, :, :]            # (B,i,j,nh)
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], ldiff, -jnp.inf))
+        scores = cb[..., None] * decay
+        scores = scores * dtk[:, None, :, :]                   # weight by dt_j
+        y_intra = jnp.einsum("bijh,bjhd->bihd", scores, xck)
+        # inter-chunk: y_i += (C_i . state) * exp(L_i)
+        y_inter = jnp.einsum("bis,bhds->bihd", cck, state) * \
+            jnp.exp(L)[:, :, :, None]
+        # new state: exp(L_end - L_j) dt_j  x_j B_j^T  summed, plus decayed old
+        decay_end = jnp.exp(L[:, -1:, :] - L)                  # (B,Ck,nh)
+        w = (dtk * decay_end)[..., None]                       # (B,Ck,nh,1)
+        state_new = jnp.einsum("bjhd,bjs->bhds", xck * w, bck)
+        state = state * jnp.exp(L[:, -1])[:, :, None, None] + state_new
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    state_f, y = jax.lax.scan(body, state0, (xs_c, B_c, C_c, dt_c, dA_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, cs * chunk, nh, hd)[:, :s]
+    y = y + xs[:, :s] * p["D"][None, None, :, None]
+    y = (y * jax.nn.silu(z.astype(jnp.float32)).reshape(b, s, nh, hd)
+         ).reshape(b, s, din)
+    out = common.linear(p["out_proj"], y.astype(x.dtype))
+    if return_state:
+        # conv cache: last (conv_dim-1) raw (pre-conv, pre-silu) channels
+        kconv = cfg.conv_dim - 1
+        hist = xbc_raw[:, -kconv:].astype(jnp.float32)
+        if s < kconv:
+            hist = jnp.pad(hist, ((0, 0), (kconv - s, 0), (0, 0)))
+        return x + out, {"conv": hist, "state": state_f}
+    return x + out
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    din, nh, hd, ds = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, din + 2 * ds), dtype),
+        "state": jnp.zeros((batch, nh, hd, ds), dtype),
+    }
+
+
+def mamba2_decode(p, cfg: ModelConfig, x: jnp.ndarray, cache):
+    """One step.  x: (B, 1, d) -> (y: (B, 1, d), cache)."""
+    din, nh, hd, ds = dims(cfg)
+    b = x.shape[0]
+    h = common.rms_norm(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _split_proj(cfg, common.linear(p["in_proj"], h))
+    xbc = xbc[:, 0]                                             # (B, C)
+    hist = jnp.concatenate([cache["conv"],
+                            xbc[:, None].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    conv = (hist * w[None]).sum(axis=1) + p["conv_b"]
+    xbc = jax.nn.silu(conv.astype(jnp.float32))
+    xst = xbc[:, :din].reshape(b, nh, hd)
+    B = xbc[:, din:din + ds]
+    C = xbc[:, din + ds:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                        # (B, nh)
+    state = cache["state"] * dA[:, :, None, None] + \
+        jnp.einsum("bhd,bs->bhds", xst * dt[..., None], B)
+    y = jnp.einsum("bhds,bs->bhd", state, C) + xst * p["D"][None, :, None]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32)).reshape(b, nh, hd)
+    out = common.linear(p["out_proj"], y.reshape(b, 1 * din)[:, None, :]
+                        .astype(x.dtype))
+    new_cache = {"conv": hist[:, 1:], "state": state}
+    return x + out, new_cache

@@ -1,0 +1,282 @@
+"""xLSTM blocks: mLSTM (matrix memory / linear attention) and sLSTM.
+
+mLSTM keeps a per-head matrix state C (Dh x Dh) with exponential
+input/forget gating and a max-stabiliser m (arXiv:2405.04517 Eq. 19-27).
+Training runs the exact recurrence as a lax.scan over time (state tensors
+are small at this scale); decode is the single-step recurrence.
+
+sLSTM is the scalar-memory cell with recurrent (hidden-to-gate) weights —
+inherently sequential, also a lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    dq = cfg.n_heads * cfg.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": common.init_norm(d, dtype),
+        "wq": common.init_linear(ks[0], d, dq, dtype=dtype),
+        "wk": common.init_linear(ks[1], d, dq, dtype=dtype),
+        "wv": common.init_linear(ks[2], d, dq, dtype=dtype),
+        "w_if": common.init_linear(ks[3], d, 2 * cfg.n_heads,
+                                   dtype=jnp.float32),
+        "w_o": common.init_linear(ks[4], d, dq, dtype=dtype),   # output gate
+        "out_proj": common.init_linear(ks[5], dq, d, dtype=dtype),
+    }
+
+
+def _mlstm_step(state, q, k, v, i_log, f_log):
+    """One mLSTM cell step.  q,k,v: (B,H,Dh); gates: (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(f_log + m, i_log)                       # (B,H)
+    f_act = jnp.exp(f_log + m - m_new)[..., None]
+    i_act = jnp.exp(i_log - m_new)[..., None]
+    C = C * f_act[..., None] + i_act[..., None] * \
+        (k[..., :, None] * v[..., None, :])                     # (B,H,Dh,Dh)
+    n = n * f_act + i_act * k
+    h_num = jnp.einsum("bhij,bhi->bhj", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)), 1.0)
+    h = h_num / h_den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvg(p, cfg, x):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    hin = common.rms_norm(p["ln"], x, cfg.norm_eps)
+    q = common.linear(p["wq"], hin).reshape(b, s, h, dh).astype(jnp.float32)
+    k = common.linear(p["wk"], hin).reshape(b, s, h, dh).astype(jnp.float32)
+    k = k / jnp.sqrt(float(dh))
+    v = common.linear(p["wv"], hin).reshape(b, s, h, dh).astype(jnp.float32)
+    gates = common.linear(p["w_if"], hin).astype(jnp.float32)   # (B,S,2H)
+    i_log = gates[..., :h]
+    f_log = jax.nn.log_sigmoid(gates[..., h:] + 3.0)
+    o = jax.nn.sigmoid(common.linear(p["w_o"], hin).astype(jnp.float32))
+    return q, k, v, i_log, f_log, o
+
+
+def mlstm_seq(p, cfg: ModelConfig, x: jnp.ndarray,
+              return_state: bool = False):
+    if cfg.mlstm_chunk:
+        return mlstm_seq_chunked(p, cfg, x, return_state=return_state,
+                                 chunk=cfg.mlstm_chunk)
+    return mlstm_seq_recurrent(p, cfg, x, return_state=return_state)
+
+
+def mlstm_seq_recurrent(p, cfg: ModelConfig, x: jnp.ndarray,
+                        return_state: bool = False):
+    """Exact per-token recurrence (reference path; O(S) HBM round-trips
+    of the matrix state — see EXPERIMENTS §Perf hillclimb #1)."""
+    b, s, d = x.shape
+    hh, dh = cfg.n_heads, cfg.head_dim
+    q, k, v, i_log, f_log, o = _mlstm_qkvg(p, cfg, x)
+
+    def body(state, xs):
+        qt, kt, vt, it, ft = xs
+        state, h = _mlstm_step(state, qt, kt, vt, it, ft)
+        return state, h
+
+    state0 = (jnp.zeros((b, hh, dh, dh), jnp.float32),
+              jnp.zeros((b, hh, dh), jnp.float32),
+              jnp.zeros((b, hh), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_log, f_log))
+    state_f, hs = jax.lax.scan(body, state0, xs)                # (S,B,H,Dh)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, hh * dh)
+    y = hs * o.reshape(b, s, hh * dh)
+    out = x + common.linear(p["out_proj"], y.astype(x.dtype))
+    if return_state:
+        return out, {"C": state_f[0], "n": state_f[1], "m": state_f[2]}
+    return out
+
+
+def mlstm_seq_chunked(p, cfg: ModelConfig, x: jnp.ndarray,
+                      return_state: bool = False, chunk: int = 64):
+    """Chunkwise-parallel mLSTM (stabilised linear attention).
+
+    Within a chunk the output is a decay-masked (q·k) quadratic form on
+    the MXU; across chunks only the (B, H, Dh, Dh) matrix state is carried
+    through a lax.scan — HBM traffic drops from O(S) state round-trips to
+    O(S/chunk) (EXPERIMENTS §Perf hillclimb #1).  Exactly equals the
+    recurrent path (same max-stabilised exponential gating).
+    """
+    b, s, d = x.shape
+    hh, dh = cfg.n_heads, cfg.head_dim
+    q, k, v, i_log, f_log, o = _mlstm_qkvg(p, cfg, x)
+
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        # padded steps: f_log = 0 is WRONG (adds decay); use f=0 -> log 1?
+        # f_log pad 0.0 keeps state scale; i_log pad -inf kills input.
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_log = jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+
+    def rs(t, extra):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + extra), 1, 0)
+
+    qc, kc, vc = rs(q, (hh, dh)), rs(k, (hh, dh)), rs(v, (hh, dh))
+    ic, fc = rs(i_log, (hh,)), rs(f_log, (hh,))
+
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+
+    def body(carry, xs):
+        C, n, m = carry                     # (B,H,Dh,Dh),(B,H,Dh),(B,H)
+        qk, kk, vk, ik, fk = xs
+        F = jnp.cumsum(fk, axis=1)          # (B,chunk,H) inclusive
+        # log-weights: intra a[i,j] = F_i - F_j + i_j (j<=i); inter = F_i + m
+        a_intra = F[:, :, None, :] - F[:, None, :, :] + ik[:, None, :, :]
+        a_intra = jnp.where(causal[None, :, :, None], a_intra, -jnp.inf)
+        m_intra = a_intra.max(axis=2)       # (B,chunk,H)
+        m_inter = F + m[:, None, :]
+        m_comb = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        # intra-chunk numerator / denominator
+        w = jnp.exp(a_intra - m_comb[:, :, None, :])    # (B,i,j,H)
+        qkd = jnp.einsum("bihe,bjhe->bijh", qk, kk)     # (B,i,j,H)
+        h_num = jnp.einsum("bijh,bjhe->bihe", w * qkd, vk)
+        n_dot = jnp.einsum("bijh,bjhe,bihe->bih", w, kk, qk)
+        # inter-chunk
+        scale_i = jnp.exp(m_inter - m_comb)             # (B,chunk,H)
+        h_num = h_num + jnp.einsum("bihe,bhed->bihd", qk, C) * \
+            scale_i[..., None]
+        n_dot = n_dot + jnp.einsum("bihe,bhe->bih", qk, n) * scale_i
+        # same floor as the recurrent cell (_mlstm_step): max(|n.q|, 1)
+        denom = jnp.maximum(jnp.abs(n_dot), 1.0)
+        h = h_num / denom[..., None]                     # (B,chunk,H,Dh)
+        # state update to end of chunk
+        F_last = F[:, -1:, :]                            # (B,1,H)
+        g = F_last - F + ik                              # (B,chunk,H)
+        m_state = jnp.maximum(F_last[:, 0] + m, g.max(axis=1))   # (B,H)
+        wS = jnp.exp(g - m_state[:, None, :])            # (B,chunk,H)
+        C_new = C * jnp.exp(F_last[:, 0] + m - m_state)[..., None, None] + \
+            jnp.einsum("bjh,bjhe,bjhd->bhed", wS, kk, vk)
+        n_new = n * jnp.exp(F_last[:, 0] + m - m_state)[..., None] + \
+            jnp.einsum("bjh,bjhe->bhe", wS, kk)
+        return (C_new, n_new, m_state), h
+
+    state0 = (jnp.zeros((b, hh, dh, dh), jnp.float32),
+              jnp.zeros((b, hh, dh), jnp.float32),
+              jnp.zeros((b, hh), jnp.float32))
+    state_f, hs = jax.lax.scan(body, state0, (qc, kc, vc, ic, fc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, hh * dh)[:, :s]
+    y = hs * o.reshape(b, s, hh * dh)
+    out = x + common.linear(p["out_proj"], y.astype(x.dtype))
+    if return_state:
+        return out, {"C": state_f[0], "n": state_f[1], "m": state_f[2]}
+    return out
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    hh, dh = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, hh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, hh, dh), jnp.float32),
+            "m": jnp.zeros((batch, hh), jnp.float32)}
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: jnp.ndarray, cache):
+    b = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    q, k, v, i_log, f_log, o = _mlstm_qkvg(p, cfg, x)
+    state = (cache["C"], cache["n"], cache["m"])
+    state, h = _mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                           i_log[:, 0], f_log[:, 0])
+    y = (h.reshape(b, 1, hh * dh) * o)
+    out = x + common.linear(p["out_proj"], y.astype(x.dtype))
+    return out, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Block-diagonal sLSTM (xLSTM §2.2: per-head recurrence).
+
+    The recurrent matrix acts within heads only — this is both the
+    paper's design and what keeps the sequential time scan free of
+    cross-device collectives when heads are sharded (EXPERIMENTS §Perf
+    hillclimb #1, iteration 3).
+    """
+    d = cfg.d_model
+    hh = cfg.n_heads
+    dh = d // hh
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": common.init_norm(d, dtype),
+        "w": common.init_linear(ks[0], d, 4 * d, dtype=jnp.float32),
+        "r": common._normal(ks[1], (hh, dh, 4 * dh), 1.0 / jnp.sqrt(dh),
+                            jnp.float32),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_proj": common.init_linear(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _recur(p, d, h):
+    """Block-diagonal recurrent projection: (B, d) -> (B, 4d)."""
+    hh, dh, _ = p["r"].shape
+    b = h.shape[0]
+    pre = jnp.einsum("bhe,hef->bhf", h.reshape(b, hh, dh), p["r"])
+    # head-major gate layout: regroup to (i|f|z|o) x d
+    pre = pre.reshape(b, hh, 4, dh)
+    return jnp.moveaxis(pre, 2, 1).reshape(b, 4 * d)
+
+
+def _slstm_step(p, d, state, wx_t):
+    c, n, h, m = state                                           # (B,d) each
+    pre = wx_t + _recur(p, d, h) + p["b"]                        # (B,4d)
+    i_log, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_pre + 3.0)
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_act = jnp.exp(i_log - m_new)
+    f_act = jnp.exp(f_log + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_act * c + i_act * z
+    n = f_act * n + i_act
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_seq(p, cfg: ModelConfig, x: jnp.ndarray,
+              return_state: bool = False):
+    b, s, d = x.shape
+    hin = common.rms_norm(p["ln"], x, cfg.norm_eps).astype(jnp.float32)
+    wx = common.linear(p["w"], hin)                              # (B,S,4d)
+
+    def body(state, wx_t):
+        return _slstm_step(p, d, state, wx_t)
+
+    z0 = jnp.zeros((b, d), jnp.float32)
+    state0 = (z0, z0, z0, z0)
+    state_f, hs = jax.lax.scan(body, state0, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                                  # (B,S,d)
+    out = x + common.linear(p["out_proj"], hs.astype(x.dtype))
+    if return_state:
+        return out, {"c": state_f[0], "n": state_f[1], "h": state_f[2],
+                     "m": state_f[3]}
+    return out
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(p, cfg: ModelConfig, x: jnp.ndarray, cache):
+    d = cfg.d_model
+    hin = common.rms_norm(p["ln"], x, cfg.norm_eps).astype(jnp.float32)
+    wx = common.linear(p["w"], hin)[:, 0]                        # (B,4d)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state, h = _slstm_step(p, d, state, wx)
+    out = x + common.linear(p["out_proj"], h[:, None].astype(x.dtype))
+    return out, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}

@@ -1,0 +1,3 @@
+from repro.rlhf import critic, kl, local, ppo, rewards, sampling  # noqa
+
+__all__ = ["ppo", "critic", "rewards", "kl", "sampling", "local"]

@@ -1,0 +1,59 @@
+"""TFIRM critics: M linear value functions on a shared feature map
+(paper Assumption 4.2 / Algorithm 3).
+
+φ(s) = stop-gradient(normalised last hidden state), ||φ|| ≤ 1 by
+construction (Assumption 4.2b).  Each objective j has w_j ∈ R^{d}, trained
+by mini-batch TD with a projection onto the ball of radius R_w (Alg. 3
+line 12).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_critic(m: int, d: int):
+    return {"w": jnp.zeros((m, d), jnp.float32)}
+
+
+def features(hidden: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) hidden -> normalised features with ||φ|| ≤ 1."""
+    h = jax.lax.stop_gradient(hidden.astype(jnp.float32))
+    return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1.0)
+
+
+def values(critic, feats: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) -> (B, S, M)."""
+    return jnp.einsum("bsd,md->bsm", feats, critic["w"])
+
+
+def project(critic, r_w: float):
+    """Π_H: scale each w_j back into the R_w ball (Alg. 3, closed form)."""
+    n = jnp.linalg.norm(critic["w"], axis=-1, keepdims=True)
+    scale = jnp.minimum(1.0, r_w / jnp.maximum(n, 1e-12))
+    return {"w": critic["w"] * scale}
+
+
+def td_update(critic, feats: jnp.ndarray, rewards_tok: jnp.ndarray,
+              mask: jnp.ndarray, gamma: float, lr: float, r_w: float):
+    """One mini-batch TD step for all M critics (Alg. 3 line 11).
+
+    feats: (B, S, d); rewards_tok: (B, S, M) per-token shaped rewards;
+    mask: (B, S) response mask.  δ_t = r_t + γ φ(s_{t+1})ᵀw − φ(s_t)ᵀw.
+    """
+    v = values(critic, feats)                                # (B, S, M)
+    v_next = jnp.concatenate([v[:, 1:], jnp.zeros_like(v[:, :1])], axis=1)
+    # mask the bootstrap at sequence end
+    next_mask = jnp.concatenate([mask[:, 1:], jnp.zeros_like(mask[:, :1])],
+                                axis=1)
+    delta = rewards_tok + gamma * v_next * next_mask[..., None] - v
+    delta = delta * mask[..., None]
+    n = jnp.maximum(mask.sum(), 1.0)
+    grad = jnp.einsum("bsm,bsd->md", delta, feats) / n
+    new = {"w": critic["w"] + lr * grad}                     # TD ascent on δφ
+    return project(new, r_w), jnp.mean(jnp.abs(delta))
+
+
+def r_w_bound(r_max: float, lambda_a: float = 0.1) -> float:
+    """R_w = 2 r_max / λ_A (App. C)."""
+    return 2.0 * r_max / lambda_a

@@ -1,0 +1,13 @@
+"""Adaptive KL controller (paper §5: adaptive KL with target 0.03;
+TRL-style proportional controller)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adaptive_kl_update(kl_coef: jnp.ndarray, observed_kl: jnp.ndarray,
+                       target: float, horizon: float = 64.0) -> jnp.ndarray:
+    """coef ← coef · (1 + clip(err, ±0.2)/horizon·...) — TRL AdaptiveKLController."""
+    err = jnp.clip(observed_kl / jnp.maximum(target, 1e-8) - 1.0, -0.2, 0.2)
+    mult = 1.0 + err * (1.0 / horizon) * 64.0
+    return jnp.clip(kl_coef * mult, 1e-4, 10.0)

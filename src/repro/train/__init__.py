@@ -1,0 +1,3 @@
+from repro.train import checkpoint, optim  # noqa
+
+__all__ = ["optim", "checkpoint"]

@@ -1,0 +1,55 @@
+"""Pytree checkpointing to .npz (no orbax in this environment).
+
+Leaves are flattened with '/'-joined key paths; restore rebuilds the exact
+nested-dict/tuple structure from a reference tree (shape/dtype validated).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16 cast path; store widened (dtype restored
+            # from the reference tree on load)
+            arr = arr.astype(np.float32)
+        out[_key(path)] = arr
+    return out
+
+
+def save(path: str, tree, step: Optional[int] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _paths(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def restore(path: str, ref_tree):
+    """Load into the structure of ``ref_tree`` (shapes/dtypes must match)."""
+    with np.load(path) as data:
+        flat_ref = jax.tree_util.tree_flatten_with_path(ref_tree)
+        leaves = []
+        for p, leaf in flat_ref[0]:
+            key = _key(p)
+            arr = data[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"shape mismatch at {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(jnp.asarray(arr, leaf.dtype))
+        step = int(data["__step__"]) if "__step__" in data else None
+    return jax.tree_util.tree_unflatten(flat_ref[1], leaves), step

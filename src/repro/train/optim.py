@@ -1,0 +1,91 @@
+"""Pure-JAX optimizers over param pytrees (no optax in this environment).
+
+Adam/AdamW with global-norm clipping and simple LR schedules.  State is a
+pytree mirroring the params, so it shards identically under pjit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32),
+                               params)
+    z2 = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                params)
+    return AdamState(z, z2, jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), n
+
+
+def adam_update(grads, state: AdamState, params, *, lr,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0,
+                max_grad_norm: Optional[float] = None):
+    """Returns (new_params, new_state, grad_norm)."""
+    gn = global_norm(grads)
+    if max_grad_norm is not None:
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    b1c = 1.0 - b1 ** cf
+    b2c = 1.0 - b2 ** cf
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    mu = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(mu, nu, count), gn
+
+
+def sgd_update(grads, params, *, lr):
+    """θ ← θ − α g  (the update TFIRM analyses)."""
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+
+
+def cosine_lr(base_lr: float, warmup: int, total: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return fn

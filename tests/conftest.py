@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device.  The 512-device override is
+# reserved for repro.launch.dryrun (see its module docstring).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

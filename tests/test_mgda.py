@@ -1,0 +1,165 @@
+"""Property + unit tests for the regularized MGDA core (paper Eq. 1-3,
+App. A/H, Lemma F.6)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import drift, mgda
+
+settings = hypothesis.settings(max_examples=40, deadline=None)
+
+
+def rand_psd(key, m, scale=1.0):
+    a = jax.random.normal(key, (m, m + 2)) * scale
+    return a @ a.T
+
+
+# ------------------------------------------------------------- projection
+@settings
+@hypothesis.given(hnp.arrays(np.float64, (5,),
+                             elements=st.floats(-10, 10)))
+def test_project_simplex_is_projection(v):
+    p = np.asarray(mgda.project_simplex(jnp.asarray(v, jnp.float32)))
+    assert abs(p.sum() - 1.0) < 1e-5
+    assert (p >= -1e-7).all()
+    p2 = np.asarray(mgda.project_simplex(jnp.asarray(p)))
+    np.testing.assert_allclose(p, p2, atol=1e-5)
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.float64, (4,), elements=st.floats(-5, 5)),
+                  hnp.arrays(np.float64, (4,), elements=st.floats(0, 1)))
+def test_project_simplex_is_nearest(v, w):
+    """Projection is closer to v than any other simplex point."""
+    hypothesis.assume(w.sum() > 0.1)
+    v = jnp.asarray(v, jnp.float32)
+    p = mgda.project_simplex(v)
+    q = jnp.asarray(w / max(w.sum(), 1e-9), jnp.float32)
+    assert float(jnp.sum((p - v) ** 2)) <= float(jnp.sum((q - v) ** 2)) + 1e-4
+
+
+# ----------------------------------------------------------------- solvers
+@pytest.mark.parametrize("m", [2, 3, 4])
+def test_pgd_beats_grid(m):
+    key = jax.random.PRNGKey(m)
+    Q = rand_psd(key, m) + 0.05 * jnp.eye(m)
+    lam = mgda.solve_qp_pgd(Q, iters=500)
+    f_star = float(lam @ Q @ lam)
+    # compare against a simplex grid
+    grid = np.random.RandomState(0).dirichlet(np.ones(m), size=500)
+    f_grid = np.einsum("bi,ij,bj->b", grid, np.asarray(Q), grid).min()
+    assert f_star <= f_grid + 1e-4
+
+
+def test_closed_form_m2_matches_pgd():
+    for seed in range(10):
+        Q = rand_psd(jax.random.PRNGKey(seed), 2) + 0.01 * jnp.eye(2)
+        l1 = mgda.solve_qp_m2(Q)
+        l2 = mgda.solve_qp_pgd(Q, iters=2000)
+        f1 = float(l1 @ Q @ l1)
+        f2 = float(l2 @ Q @ l2)
+        assert abs(f1 - f2) < 1e-4, (seed, f1, f2)
+
+
+def test_frank_wolfe_matches_pgd():
+    for seed in range(5):
+        Q = rand_psd(jax.random.PRNGKey(seed), 3) + 0.05 * jnp.eye(3)
+        l1 = mgda.solve_qp_frank_wolfe(Q, iters=500)
+        l2 = mgda.solve_qp_pgd(Q, iters=2000)
+        assert abs(float(l1 @ Q @ l1) - float(l2 @ Q @ l2)) < 1e-3
+
+
+# ----------------------------------------------------------- regularization
+def test_trace_normalization():
+    G = jnp.diag(jnp.asarray([100.0, 300.0]))
+    Q = mgda.regularize(G, beta=0.0, trace_normalize=True)
+    np.testing.assert_allclose(float(jnp.trace(Q)), 2.0, rtol=1e-5)
+
+
+def test_beta_infinity_gives_uniform():
+    G = rand_psd(jax.random.PRNGKey(0), 3)
+    lam = mgda.solve(G, beta=1e6, trace_normalize=True, iters=500)
+    np.testing.assert_allclose(np.asarray(lam), np.ones(3) / 3, atol=1e-3)
+
+
+def test_beta_improves_conditioning():
+    g = jnp.asarray([[1.0, 0.0], [1.0, 1e-4]])  # nearly parallel gradients
+    G = g @ g.T
+    c0 = np.linalg.cond(np.asarray(mgda.regularize(G, 0.0,
+                                                   trace_normalize=True)))
+    c1 = np.linalg.cond(np.asarray(mgda.regularize(G, 0.1,
+                                                   trace_normalize=True)))
+    assert c1 < c0
+
+
+def test_preference_monotone():
+    """Higher preference p_j -> larger weight lambda_j (Eq. 3)."""
+    G = rand_psd(jax.random.PRNGKey(3), 2) + 0.1 * jnp.eye(2)
+    lam_lo = mgda.solve(G, 0.0, preference=jnp.asarray([0.5, 2.0]),
+                        iters=500)
+    lam_hi = mgda.solve(G, 0.0, preference=jnp.asarray([2.0, 0.5]),
+                        iters=500)
+    assert float(lam_hi[0]) > float(lam_lo[0])
+
+
+# ------------------------------------------------------ disagreement drift
+def test_lambda_solution_stability_in_beta():
+    """Sensitivity of lambda* to gradient noise decreases with beta
+    (the paper's core stabilisation claim, Rmk 4.8)."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (2, 64))
+    g = g.at[1].set(g[0] + 0.01 * jax.random.normal(jax.random.fold_in(key, 1),
+                                                    (64,)))
+
+    def spread(beta):
+        lams = []
+        for i in range(20):
+            noise = 0.05 * jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                             g.shape)
+            G = mgda.gram_matrix(g + noise)
+            lams.append(mgda.solve(G, beta, iters=300))
+        lams = jnp.stack(lams)
+        return float(drift.lambda_disagreement(lams)["pairwise_mean"])
+
+    assert spread(1.0) < spread(0.0)
+
+
+def test_lemma_f6_bound():
+    """||lam_c - lam_c'|| <= (4RM/beta) max_j ||g_j^c - g_j^c'|| for the
+    UNNORMALISED regularized problem (Lemma F.6)."""
+    key = jax.random.PRNGKey(7)
+    m, d, beta = 3, 128, 0.5
+    for i in range(10):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        g1 = [0.1 * jax.random.normal(jax.random.fold_in(k1, j), (d,))
+              for j in range(m)]
+        g2 = [a + 0.01 * jax.random.normal(jax.random.fold_in(k2, j), (d,))
+              for j, a in enumerate(g1)]
+        lam1 = mgda.solve(mgda.gram_matrix(g1), beta,
+                          trace_normalize=False, iters=800)
+        lam2 = mgda.solve(mgda.gram_matrix(g2), beta,
+                          trace_normalize=False, iters=800)
+        chk = drift.lemma_f6_check(g1, g2, lam1, lam2, beta)
+        assert float(chk["lhs"]) <= float(chk["rhs"]) + 1e-5
+
+
+def test_combine_matches_manual():
+    key = jax.random.PRNGKey(0)
+    grads = [{"a": jax.random.normal(jax.random.fold_in(key, j), (5,))}
+             for j in range(3)]
+    lam = jnp.asarray([0.2, 0.3, 0.5])
+    out = mgda.combine(grads, lam)
+    manual = sum(float(lam[j]) * np.asarray(grads[j]["a"]) for j in range(3))
+    np.testing.assert_allclose(np.asarray(out["a"]), manual, rtol=1e-5)
+
+
+def test_gram_matrix_pytrees_vs_stacked():
+    key = jax.random.PRNGKey(1)
+    flat = jax.random.normal(key, (3, 50))
+    trees = [{"x": flat[j, :30], "y": flat[j, 30:]} for j in range(3)]
+    np.testing.assert_allclose(np.asarray(mgda.gram_matrix(trees)),
+                               np.asarray(mgda.gram_matrix(flat)), rtol=1e-5)

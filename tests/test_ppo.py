@@ -1,0 +1,166 @@
+"""Multi-objective PPO machinery: logprobs, GAE, shared-forward VJP,
+critics, KL controller, rewards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig
+from repro.models import transformer as T
+from repro.models.common import split_trainable
+from repro.rlhf import critic as critic_lib
+from repro.rlhf import kl as kl_lib
+from repro.rlhf import ppo, rewards as rewards_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_token_logprobs_manual():
+    logits = jax.random.normal(KEY, (1, 4, 7))
+    tokens = jnp.asarray([[1, 3, 0, 5]])
+    lp = ppo.token_logprobs(logits, tokens)
+    assert lp.shape == (1, 4)
+    assert float(lp[0, 0]) == 0.0
+    want = jax.nn.log_softmax(logits[0, 1])[0]   # token at pos 2 from logits 1
+    np.testing.assert_allclose(float(lp[0, 2]), float(want), rtol=1e-5)
+
+
+def test_gae_matches_naive_loop():
+    b, s, m = 2, 6, 2
+    gamma, lam = 0.95, 0.9
+    r = jax.random.normal(KEY, (b, s, m))
+    v = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, m))
+    mask = jnp.ones((b, s))
+    adv, ret = ppo.gae(r, v, mask, gamma, lam)
+    # naive reference
+    adv_ref = np.zeros((b, s, m))
+    r_, v_ = np.asarray(r), np.asarray(v)
+    for bi in range(b):
+        last = np.zeros(m)
+        for t in reversed(range(s)):
+            v_next = v_[bi, t + 1] if t + 1 < s else np.zeros(m)
+            nm = 1.0 if t + 1 < s else 0.0
+            delta = r_[bi, t] + gamma * v_next * nm - v_[bi, t]
+            last = delta + gamma * lam * nm * last
+            adv_ref[bi, t] = last
+    np.testing.assert_allclose(np.asarray(adv), adv_ref, rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ret), adv_ref + v_, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_shaped_rewards_terminal_placement():
+    mask = jnp.asarray([[0.0, 1.0, 1.0, 0.0]])
+    kl = jnp.zeros((1, 4))
+    rw = jnp.asarray([[0.7, 0.3]])
+    r_tok = ppo.shaped_rewards(kl, mask, rw, jnp.asarray(0.1))
+    # terminal reward lands on the LAST response position (index 2)
+    np.testing.assert_allclose(np.asarray(r_tok[0, 2]), [0.7, 0.3],
+                               rtol=1e-6)
+    assert float(jnp.abs(r_tok[0, 0]).sum()) == 0.0
+    assert float(jnp.abs(r_tok[0, 3]).sum()) == 0.0
+
+
+def _tiny_setup():
+    cfg = get_config("llama-3.2-1b").reduced(n_layers=2, d_model=64,
+                                             vocab=128)
+    params = T.init_params(cfg, KEY, dtype=jnp.float32)
+    trainable, frozen = split_trainable(params)
+    fc = FIRMConfig(batch_size=2)
+    b, s = 2, 12
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    mask = jnp.concatenate([jnp.zeros((b, 4)), jnp.ones((b, 8))], 1)
+    lp = -2.0 * jnp.ones((b, s))
+    batch = ppo.PPOBatch(tokens, mask.astype(jnp.float32), lp, lp,
+                         jax.random.uniform(KEY, (b, 2)))
+    critic = critic_lib.init_critic(2, cfg.d_model)
+    return cfg, fc, trainable, frozen, critic, batch
+
+
+def test_per_objective_grads_match_individual_jax_grad():
+    """The shared-forward M-pull VJP == M independent jax.grad calls."""
+    cfg, fc, trainable, frozen, critic, batch = _tiny_setup()
+    kl_coef = jnp.asarray(0.1)
+    grads, losses, _ = ppo.per_objective_grads(
+        cfg, fc, trainable, frozen, critic, batch, kl_coef)
+    for j in range(2):
+        def loss_j(tr, j=j):
+            ls, _ = ppo.multi_objective_losses(
+                cfg, fc, tr, frozen, critic, batch, kl_coef)
+            return ls[j]
+        g_ref = jax.grad(loss_j)(trainable)
+        for a, b_ in zip(jax.tree_util.tree_leaves(grads[j]),
+                         jax.tree_util.tree_leaves(g_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-4, atol=1e-6)
+
+
+def test_ppo_losses_finite_and_distinct():
+    cfg, fc, trainable, frozen, critic, batch = _tiny_setup()
+    losses, _ = ppo.multi_objective_losses(
+        cfg, fc, trainable, frozen, critic, batch, jnp.asarray(0.1))
+    assert losses.shape == (2,)
+    assert np.isfinite(np.asarray(losses)).all()
+
+
+def test_critic_projection_bound():
+    c = {"w": 100.0 * jnp.ones((2, 8))}
+    r_w = 3.0
+    p = critic_lib.project(c, r_w)
+    norms = np.linalg.norm(np.asarray(p["w"]), axis=-1)
+    assert (norms <= r_w + 1e-5).all()
+
+
+def test_critic_td_learns_constant_reward():
+    """TD on a constant positive reward pushes values up."""
+    key = KEY
+    b, s, d, m = 4, 8, 16, 2
+    feats = critic_lib.features(jax.random.normal(key, (b, s, d)))
+    critic = critic_lib.init_critic(m, d)
+    r_tok = jnp.ones((b, s, m))
+    mask = jnp.ones((b, s))
+    v0 = float(critic_lib.values(critic, feats).mean())
+    for _ in range(50):
+        critic, err = critic_lib.td_update(critic, feats, r_tok, mask,
+                                           0.9, 0.5, r_w=20.0)
+    v1 = float(critic_lib.values(critic, feats).mean())
+    assert v1 > v0
+
+
+def test_features_norm_bounded():
+    h = 100.0 * jax.random.normal(KEY, (2, 5, 8))
+    f = critic_lib.features(h)
+    assert float(jnp.linalg.norm(f, axis=-1).max()) <= 1.0 + 1e-5
+
+
+def test_adaptive_kl_direction():
+    c = jnp.asarray(0.2)
+    up = kl_lib.adaptive_kl_update(c, jnp.asarray(0.5), target=0.03)
+    down = kl_lib.adaptive_kl_update(c, jnp.asarray(0.0), target=0.03)
+    assert float(up) > 0.2 > float(down)
+
+
+def test_rewards_in_unit_interval_and_conflicting():
+    fns = rewards_lib.make_reward_fns(1000, 3)
+    key = KEY
+    toks = jax.random.randint(key, (16, 32), 0, 1000)
+    mask = jnp.ones((16, 32))
+    r = rewards_lib.score_batch(fns, toks, mask)
+    assert r.shape == (16, 3)
+    assert float(r.min()) >= 0.0 and float(r.max()) <= 1.0
+    # conflict: tokens entirely inside the harmful/helpful overlap band
+    overlap = jnp.full((4, 32), int(1000 * 0.47))
+    r2 = rewards_lib.score_batch(fns, overlap, jnp.ones((4, 32)))
+    assert float(r2[:, 0].mean()) > 0.9      # very helpful
+    assert float(r2[:, 1].mean()) < 0.2      # very harmful
+
+
+def test_heterogeneous_rm_variants_differ():
+    f1 = rewards_lib.make_reward_fns(1000, 2, variant="default")
+    f2 = rewards_lib.make_reward_fns(1000, 2, variant="alt")
+    toks = jax.random.randint(KEY, (8, 16), 0, 1000)
+    mask = jnp.ones((8, 16))
+    r1 = rewards_lib.score_batch(f1, toks, mask)
+    r2 = rewards_lib.score_batch(f2, toks, mask)
+    assert not np.allclose(np.asarray(r1), np.asarray(r2))
