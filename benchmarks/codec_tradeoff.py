@@ -1,0 +1,94 @@
+"""Reward-vs-bytes Pareto sweep: codecs x algorithms (FIRM's headline
+communication-efficiency claim with a *real* codec layer instead of the
+analytic model).
+
+Each cell trains a smoke-scale federated run with the given uplink codec
+and reports measured ledger bytes (Payload.nbytes, exact per dtype),
+the analytic prediction, and the end-of-run rewards — the data behind an
+accuracy-vs-bandwidth Pareto front (FedMOA-style heterogeneous-reward
+deployments pick their operating point off this curve).
+
+  PYTHONPATH=src python -m benchmarks.run --only codec
+  PYTHONPATH=src python -m benchmarks.codec_tradeoff        # standalone
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import make_trainer, row
+from repro.core import comms as comms_lib
+
+CODECS = ("identity", "int8+ef", "int4+ef", "topk:0.05+ef", "lowrank:4+ef")
+ALGORITHMS = ("firm", "fedcmoo")
+ROUNDS = 2
+
+
+def _sweep_cell(algorithm: str, codec: str, rounds: int = ROUNDS):
+    tr = make_trainer(algorithm, uplink_codec=codec)
+    t0 = time.time()
+    hist = tr.run(rounds)
+    us = (time.time() - t0) / rounds * 1e6
+    last = hist[-1]
+    return tr, us, {
+        "rewards": np.asarray(last["rewards"]).tolist(),
+        "up_bytes": int(last["up_bytes"]),
+        "down_bytes": int(last["down_bytes"]),
+    }
+
+
+def bench_codec_tradeoff():
+    """The headline table: measured uplink bytes + rewards per codec."""
+    out = []
+    base_up = {}
+    for algorithm in ALGORITHMS:
+        for codec in CODECS:
+            tr, us, cell = _sweep_cell(algorithm, codec)
+            key = algorithm
+            if codec == "identity":
+                base_up[key] = cell["up_bytes"]
+            ratio = cell["up_bytes"] / max(1, base_up.get(key, 0))
+            d = tr.d_trainable
+            fc = tr.fc
+            analytic = comms_lib.codec_bytes_per_param(codec, d) * d
+            uploads_per_round = fc.n_clients
+            if algorithm == "fedcmoo":      # M grads per step + the delta
+                uploads_per_round *= fc.n_objectives * fc.local_steps + 1
+            measured = cell["up_bytes"] / (ROUNDS * uploads_per_round)
+            cell.update({
+                "codec": codec,
+                "algorithm": algorithm,
+                "uplink_ratio_vs_identity": round(ratio, 4),
+                "analytic_bytes_per_upload": int(analytic),
+                "measured_bytes_per_upload": int(measured),
+                "padding_overhead": round(measured / analytic, 4),
+            })
+            out.append(row(f"codec_tradeoff_{algorithm}_{codec}", us, cell))
+    return out
+
+
+def bench_codec_acceptance():
+    """int8 uplink must be <= ~30% of identity at equal round count."""
+    _, _, ident = _sweep_cell("firm", "identity")
+    _, us, int8 = _sweep_cell("firm", "int8+ef")
+    ratio = int8["up_bytes"] / ident["up_bytes"]
+    return row("codec_int8_acceptance", us, {
+        "identity_up_bytes": ident["up_bytes"],
+        "int8_up_bytes": int8["up_bytes"],
+        "ratio": round(ratio, 4),
+        "meets_30pct_target": bool(ratio <= 0.30),
+        "rewards_finite": bool(np.isfinite(np.asarray(
+            int8["rewards"])).all()),
+    })
+
+
+ALL = [bench_codec_tradeoff, bench_codec_acceptance]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        res = fn()
+        for line in (res if isinstance(res, list) else [res]):
+            print(line, flush=True)

@@ -29,6 +29,7 @@ def tiny_cfg(n_layers=2, d_model=64, vocab=256):
 def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
                  local_steps=1, batch=2, preference=None, seed=0,
                  heterogeneous_rms=False, dirichlet_alpha=0.3,
+                 uplink_codec="identity", downlink_codec="identity",
                  cfg=None) -> FederatedTrainer:
     cfg = cfg or tiny_cfg()
     fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
@@ -36,7 +37,9 @@ def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
                     preference=preference)
     ec = EngineConfig(algorithm=algorithm, max_new=8, prompt_len=4,
                       seed=seed, heterogeneous_rms=heterogeneous_rms,
-                      dirichlet_alpha=dirichlet_alpha)
+                      dirichlet_alpha=dirichlet_alpha,
+                      uplink_codec=uplink_codec,
+                      downlink_codec=downlink_codec)
     return FederatedTrainer(cfg, fc, ec)
 
 

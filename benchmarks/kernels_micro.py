@@ -75,4 +75,40 @@ def bench_mgda_solver():
     return row("mgda_qp_pgd_100iters_M3", us, {})
 
 
-ALL = [bench_gram, bench_attention, bench_rmsnorm, bench_mgda_solver]
+def bench_quantize():
+    """int8 codec hot path on a 1M-param flat delta (jnp fallback timed;
+    Pallas interpret agreement reported)."""
+    from repro.kernels.quantize import _DET_BITS
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (1024, 1024))
+    bits = jnp.full(x.shape, _DET_BITS, jnp.uint32)
+    fn = jax.jit(lambda x, b: ref.dequantize(*ref.quantize(x, b, 127)))
+    us = _time(fn, x, bits)
+    cp, sp = ops.quantize(x, bits, 127)
+    cr, sr = ref.quantize(x, bits, 127)
+    return row("kernel_quantize_int8_1M", us, {
+        "codes_exact_match": bool((np.asarray(cp) == np.asarray(cr)).all()),
+        "roundtrip_rel_err": float(
+            jnp.linalg.norm(ref.dequantize(cr, sr) - x) / jnp.linalg.norm(x)),
+        "bytes_out_vs_f32": round((cp.size + 4 * sp.size) / (4 * x.size), 4),
+    })
+
+
+def bench_topk_threshold():
+    """Threshold-refinement top-k selection vs lax.top_k on 1M entries."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (1024, 1024))
+    k = 10_000
+    fn = jax.jit(lambda x: jax.lax.top_k(jnp.abs(x.reshape(-1)), k))
+    us = _time(fn, x)
+    lo, hi = ops.topk_threshold(x, k, use_pallas=False)
+    cnt_lo = float(ref.abs_threshold_count(x, lo))
+    cnt_hi = float(ref.abs_threshold_count(x, hi))
+    return row("kernel_topk_threshold_1M_k10k", us, {
+        "bracket_counts": [cnt_lo, cnt_hi], "k": k,
+        "selection_exact": bool(cnt_hi < k <= cnt_lo),
+    })
+
+
+ALL = [bench_gram, bench_attention, bench_rmsnorm, bench_mgda_solver,
+       bench_quantize, bench_topk_threshold]

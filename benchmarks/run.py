@@ -8,6 +8,7 @@ Groups:
   paper_figures  — Figs. 1-8 / RQ1-RQ3 / App. A experiments (toy scale)
   theory_checks  — Thm 4.5 drift scaling, Lemma F.6, linear speedup
   kernels_micro  — kernel microbenches + Pallas oracle agreement
+  codec_tradeoff — reward-vs-measured-bytes Pareto sweep (comms codecs)
   roofline       — per-(arch x shape x mesh) roofline from the dry-run
 """
 from __future__ import annotations
@@ -23,10 +24,11 @@ def main() -> None:
                     help="comma-separated substrings of bench names")
     args = ap.parse_args()
 
-    from benchmarks import (compression_error, kernels_micro, paper_figures,
-                            roofline_report, theory_checks)
+    from benchmarks import (codec_tradeoff, compression_error, kernels_micro,
+                            paper_figures, roofline_report, theory_checks)
     benches = (paper_figures.ALL + theory_checks.ALL + kernels_micro.ALL +
-               compression_error.ALL + roofline_report.ALL)
+               compression_error.ALL + codec_tradeoff.ALL +
+               roofline_report.ALL)
     filters = [f for f in args.only.split(",") if f]
 
     print("name,us_per_call,derived")

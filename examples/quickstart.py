@@ -32,7 +32,9 @@ def main():
               f"drift={s['lam_disagreement']:.4f}  "
               f"comm={s['comm_bytes'] / 1e6:.1f}MB")
     print("done — the same API scales to every config in repro/configs "
-          "(see launch/train.py and the multi-pod dry-run).")
+          "(see launch/train.py and the multi-pod dry-run); pass "
+          "EngineConfig(uplink_codec='int8+ef') to compress the uplink "
+          "~4x (examples/codec_pareto.py sweeps the codec registry).")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,186 @@
+"""Codec protocol + payload container for federated uplink/downlink traffic.
+
+A ``Codec`` turns a param/delta pytree into a ``Payload`` — a bag of
+*actually transmitted* arrays whose ``nbytes`` is measured from the buffer
+dtypes (int8 codes count 1 byte, packed int4 nibbles half a byte, ...),
+replacing the old f32-only ``tree_param_bytes`` assumption — and back.
+
+Codecs are stateless objects; per-client compression state (the error
+feedback residual) is threaded explicitly through ``encode`` so one codec
+instance serves every client while residuals stay client-local:
+
+    payload, state = codec.encode(tree, state, key=key)
+    tree2 = codec.decode(payload)
+
+``ErrorFeedback`` wraps any lossy codec: the client adds its accumulated
+residual before encoding and keeps the new residual (x + e) - decode(...)
+locally, so quantization/sparsification error is re-injected instead of
+lost — the standard EF trick that restores convergence under biased
+compressors (cf. PowerSGD / EF-SGD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Payload:
+    """What actually crosses the wire: named buffers + static metadata.
+
+    ``meta`` (treedef, shapes, codec params) is O(#leaves) python data —
+    negligible next to the O(d) buffers and excluded from the byte count.
+    """
+    kind: str
+    arrays: Dict[str, jnp.ndarray]
+    meta: Dict[str, Any]
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(a.size * a.dtype.itemsize
+                       for a in self.arrays.values()))
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Enough structure to rebuild a pytree from a flat f32 vector."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+
+    @property
+    def size(self) -> int:
+        out = 0
+        for s in self.shapes:
+            n = 1
+            for x in s:
+                n *= x
+            out += n
+        return out
+
+
+def tree_to_flat(tree) -> Tuple[jnp.ndarray, TreeSpec]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    spec = TreeSpec(treedef, tuple(l.shape for l in leaves),
+                    tuple(l.dtype for l in leaves))
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+    return flat, spec
+
+
+def flat_to_tree(flat: jnp.ndarray, spec: TreeSpec):
+    leaves, off = [], 0
+    for shape, dtype in zip(spec.shapes, spec.dtypes):
+        n = 1
+        for s in shape:
+            n *= s
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+class Codec:
+    """Base codec: subclasses implement the flat-vector transform."""
+
+    name = "codec"
+    stateful = False
+
+    # -- flat-vector transform (override) -------------------------------
+    def encode_flat(self, flat: jnp.ndarray, *, key=None
+                    ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, Any]]:
+        raise NotImplementedError
+
+    def decode_flat(self, payload: Payload) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def bits_per_param(self, d: int) -> float:
+        """Analytic uplink cost model (exact for the buffer layout)."""
+        raise NotImplementedError
+
+    # -- pytree API -----------------------------------------------------
+    def encode(self, tree, state=None, *, key=None
+               ) -> Tuple[Payload, Optional[Any]]:
+        flat, spec = tree_to_flat(tree)
+        arrays, meta = self.encode_flat(flat, key=key)
+        meta["spec"] = spec
+        meta["d"] = int(flat.size)
+        return Payload(self.name, arrays, meta), state
+
+    def decode(self, payload: Payload):
+        flat = self.decode_flat(payload)[:payload.meta["d"]]
+        return flat_to_tree(flat, payload.meta["spec"])
+
+    def roundtrip(self, tree, state=None, *, key=None):
+        """encode + what the receiver will decode, in one call.
+
+        Returns (payload, new_state, decoded_tree).  ErrorFeedback
+        overrides this to reuse the decode it already computed for the
+        residual instead of running a second O(d) decode.
+        """
+        payload, new_state = self.encode(tree, state, key=key)
+        return payload, new_state, self.decode(payload)
+
+
+class IdentityCodec(Codec):
+    """Raw f32 — the baseline every ratio in the benchmarks is against."""
+
+    name = "identity"
+
+    def encode_flat(self, flat, *, key=None):
+        return {"values": flat.astype(jnp.float32)}, {}
+
+    def decode_flat(self, payload):
+        return payload.arrays["values"]
+
+    def bits_per_param(self, d: int) -> float:
+        return 32.0
+
+
+class ErrorFeedback(Codec):
+    """Residual-accumulating wrapper around a lossy inner codec.
+
+    state is the client-local residual flat vector (starts at zero);
+    decode is the inner codec's (the server never sees the residual).
+    """
+
+    stateful = True
+
+    def __init__(self, inner: Codec):
+        self.inner = inner
+        self.name = inner.name + "+ef"
+
+    def _encode_with_decoded(self, tree, state, key):
+        flat, spec = tree_to_flat(tree)
+        if state is not None:
+            flat = flat + state
+        arrays, meta = self.inner.encode_flat(flat, key=key)
+        meta["spec"] = spec
+        meta["d"] = int(flat.size)
+        payload = Payload(self.inner.name, arrays, meta)
+        decoded = self.inner.decode_flat(payload)[:flat.size]
+        return payload, flat - decoded, decoded
+
+    def encode(self, tree, state=None, *, key=None):
+        payload, residual, _ = self._encode_with_decoded(tree, state, key)
+        return payload, residual
+
+    def roundtrip(self, tree, state=None, *, key=None):
+        payload, residual, decoded = self._encode_with_decoded(
+            tree, state, key)
+        return payload, residual, flat_to_tree(decoded,
+                                               payload.meta["spec"])
+
+    def decode(self, payload: Payload):
+        return self.inner.decode(payload)
+
+    def encode_flat(self, flat, *, key=None):
+        return self.inner.encode_flat(flat, key=key)
+
+    def decode_flat(self, payload):
+        return self.inner.decode_flat(payload)
+
+    def bits_per_param(self, d: int) -> float:
+        return self.inner.bits_per_param(d)

@@ -1,0 +1,78 @@
+"""Codec registry + spec-string parser.
+
+Spec grammar:  <name>[:<arg>][+ef]
+
+    identity            raw f32 (32 bits/param)
+    int8                blockwise stochastic int8 (~8.03 bits/param)
+    int4                nibble-packed stochastic int4 (~4.03 bits/param)
+    topk:<frac>         magnitude top-k, frac of params kept (64*frac)
+    lowrank:<rank>      PowerSGD-style rank-r sketch (~64r/sqrt(d))
+    ...+ef              wrap in client-local error feedback
+
+Examples: "int8", "int4+ef", "topk:0.05+ef", "lowrank:8".
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.comms.codec import Codec, ErrorFeedback, IdentityCodec
+from repro.comms.lowrank import LowRankCodec
+from repro.comms.quantize import QuantizeCodec
+from repro.comms.sparsify import TopKCodec
+
+_FACTORIES: Dict[str, Callable[[str], Codec]] = {}
+
+
+def register(name: str):
+    def deco(factory):
+        _FACTORIES[name] = factory
+        return factory
+    return deco
+
+
+@register("identity")
+def _identity(arg: str) -> Codec:
+    return IdentityCodec()
+
+
+@register("int8")
+def _int8(arg: str) -> Codec:
+    return QuantizeCodec(bits=8, stochastic=(arg != "det"))
+
+
+@register("int4")
+def _int4(arg: str) -> Codec:
+    return QuantizeCodec(bits=4, stochastic=(arg != "det"))
+
+
+@register("topk")
+def _topk(arg: str) -> Codec:
+    return TopKCodec(frac=float(arg or 0.05))
+
+
+@register("lowrank")
+def _lowrank(arg: str) -> Codec:
+    return LowRankCodec(rank=int(arg or 4))
+
+
+def available() -> tuple:
+    return tuple(sorted(_FACTORIES))
+
+
+def make_codec(spec: str) -> Codec:
+    """'topk:0.05+ef' -> ErrorFeedback(TopKCodec(0.05))."""
+    spec = (spec or "identity").strip()
+    wrap_ef = spec.endswith("+ef")
+    if wrap_ef:
+        spec = spec[:-3]
+    name, _, arg = spec.partition(":")
+    if name not in _FACTORIES:
+        raise ValueError(
+            f"unknown codec {name!r}; available: {available()}")
+    codec = _FACTORIES[name](arg)
+    if wrap_ef:
+        if isinstance(codec, IdentityCodec):
+            raise ValueError("identity codec is lossless; +ef is a no-op "
+                             "and almost certainly a config mistake")
+        codec = ErrorFeedback(codec)
+    return codec

@@ -3,6 +3,14 @@
 Analytic per-round byte counts for each protocol plus a ledger that
 records actual array traffic during simulation so benchmark tables report
 measured, not just analytic, bytes.
+
+Measured accounting is exact per buffer dtype: a raw pytree costs
+sum(size * itemsize) and an encoded ``repro.comms.Payload`` costs its
+``nbytes`` (int8 codes 1 byte, packed int4 nibbles half a byte, ...) —
+replacing the old f32-only ``size * 4`` assumption.  The codec-aware
+analytic twins (``*_round_bytes_codec``) use each codec's
+``bits_per_param`` model so benchmark tables can show analytic-vs-measured
+agreement.
 """
 from __future__ import annotations
 
@@ -15,8 +23,16 @@ BYTES_F32 = 4
 
 
 def tree_param_bytes(tree) -> int:
-    return sum(x.size * BYTES_F32 for x in jax.tree_util.tree_leaves(tree)
-               if x is not None)
+    """Measured bytes of a raw (uncoded) pytree: size * itemsize."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree) if x is not None)
+
+
+def measured_bytes(obj) -> int:
+    """Wire bytes of either an encoded Payload or a raw pytree."""
+    if hasattr(obj, "arrays") and hasattr(obj, "nbytes"):   # Payload
+        return int(obj.nbytes)
+    return tree_param_bytes(obj)
 
 
 def firm_round_bytes(d_trainable: int, n_clients: int, local_steps: int = 1
@@ -41,17 +57,53 @@ def fedcmoo_round_bytes(d_trainable: int, n_clients: int, n_objectives: int,
     return {"up": up, "down": down, "total": up + down}
 
 
+# ------------------------------------------------------- codec-aware twins
+def codec_bytes_per_param(spec: str, d_trainable: int) -> float:
+    """Analytic wire bytes/param of a codec spec (see repro.comms)."""
+    from repro.comms.registry import make_codec
+    return make_codec(spec).bits_per_param(d_trainable) / 8.0
+
+
+def firm_round_bytes_codec(d_trainable: int, n_clients: int,
+                           uplink_codec: str = "identity",
+                           downlink_codec: str = "identity",
+                           local_steps: int = 1) -> Dict[str, int]:
+    """FIRM round with coded links: still O(Cd), scaled by codec rate."""
+    up_bpp = codec_bytes_per_param(uplink_codec, d_trainable)
+    down_bpp = codec_bytes_per_param(downlink_codec, d_trainable)
+    up = int(n_clients * d_trainable * up_bpp)
+    down = int(n_clients * d_trainable * down_bpp)
+    return {"up": up, "down": down, "total": up + down}
+
+
+def fedcmoo_round_bytes_codec(d_trainable: int, n_clients: int,
+                              n_objectives: int, local_steps: int = 1,
+                              uplink_codec: str = "identity",
+                              downlink_codec: str = "identity"
+                              ) -> Dict[str, int]:
+    """FedCMOO with coded links: the M*K gradient uploads AND the param
+    sync ride the uplink codec; λ broadcasts stay f32 (they are O(M))."""
+    up_bpp = codec_bytes_per_param(uplink_codec, d_trainable)
+    down_bpp = codec_bytes_per_param(downlink_codec, d_trainable)
+    up = int(n_clients * d_trainable * up_bpp
+             * (n_objectives * local_steps + 1))
+    down = int(n_clients * (n_objectives * BYTES_F32 * local_steps
+                            + d_trainable * down_bpp))
+    return {"up": up, "down": down, "total": up + down}
+
+
 @dataclasses.dataclass
 class CommsLedger:
     up_bytes: int = 0
     down_bytes: int = 0
     rounds: int = 0
 
-    def send_up(self, tree):
-        self.up_bytes += tree_param_bytes(tree)
+    def send_up(self, obj):
+        """obj: encoded Payload or raw pytree — measured either way."""
+        self.up_bytes += measured_bytes(obj)
 
-    def send_down(self, tree):
-        self.down_bytes += tree_param_bytes(tree)
+    def send_down(self, obj):
+        self.down_bytes += measured_bytes(obj)
 
     def next_round(self):
         self.rounds += 1

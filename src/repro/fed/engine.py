@@ -9,10 +9,17 @@ communication accounting.  Algorithms:
   'firm_unreg' — β = 0 ablation (RQ2)
   'fedcmoo'    — server-centric MGDA baseline (RQ1, Askin et al. 2024)
   'linear'     — fixed-weight linear scalarization (implicit baseline)
+
+All uplink/downlink traffic flows through the repro.comms codec layer
+(EngineConfig.uplink_codec / downlink_codec registry specs): clients
+upload encoded *deltas* against the decoded broadcast they trained from,
+error-feedback residuals stay client-local, and the ledger records the
+measured Payload bytes (int8 uplink ≈ 1/4 of raw f32).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import List, Optional, Sequence
 
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comms import ErrorFeedback, make_codec
 from repro.configs.base import FIRMConfig, ModelConfig
 from repro.core import comms, drift, fedavg, fedcmoo
 from repro.data.partition import make_client_datasets
@@ -28,6 +36,23 @@ from repro.models.common import merge_trainable, split_trainable, tree_size
 from repro.rlhf import local as local_lib
 from repro.rlhf import ppo, rewards as rewards_lib
 from repro.rlhf.sampling import generate
+
+
+# Jitted callables are memoized on the (hashable, frozen) configs so every
+# trainer with the same architecture + FIRM hyperparameters shares one
+# trace/compile per process — the test suite and benchmark sweeps build
+# dozens of identically-configured trainers.
+@functools.lru_cache(maxsize=None)
+def _jit_local_step(cfg: ModelConfig, cfc: FIRMConfig):
+    return jax.jit(partial(local_lib.firm_local_step, cfg, cfc))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_ref_logprobs(cfg: ModelConfig):
+    def ref_lp(ref_params, tokens):
+        out = transformer.forward_seq(cfg, ref_params, tokens)
+        return ppo.token_logprobs(out["logits"], tokens)
+    return jax.jit(ref_lp)
 
 
 @dataclasses.dataclass
@@ -40,11 +65,17 @@ class EngineConfig:
     heterogeneous_rms: bool = False      # half the clients use the alt RM
     fedcmoo_compress_rank: Optional[int] = None
     linear_weights: Optional[Sequence[float]] = None
+    # comms codecs (repro.comms registry specs, e.g. "int8+ef")
+    uplink_codec: str = "identity"       # client -> server deltas/grads
+    downlink_codec: str = "identity"     # server -> client broadcast
 
 
 class FederatedTrainer:
     def __init__(self, cfg: ModelConfig, fc: FIRMConfig,
-                 ec: EngineConfig = EngineConfig()):
+                 ec: Optional[EngineConfig] = None):
+        # default must be constructed per instance: a shared EngineConfig
+        # default would leak mutations across trainers
+        ec = EngineConfig() if ec is None else ec
         self.cfg, self.fc, self.ec = cfg, fc, ec
         key = jax.random.PRNGKey(ec.seed)
         self.params = transformer.init_params(cfg, key)
@@ -67,6 +98,12 @@ class FederatedTrainer:
                 cfg.vocab, fc.n_objectives, variant=variant,
                 length_tolerance=max(4, ec.max_new // 2)))
         self.ledger = comms.CommsLedger()
+        # comms codecs: one stateless codec per link; per-client error
+        # feedback residuals stay in client-indexed slots here
+        self.uplink_codec = make_codec(ec.uplink_codec)
+        self.downlink_codec = make_codec(ec.downlink_codec)
+        self._uplink_state = [None] * fc.n_clients
+        self._downlink_state = None
         self.d_trainable = tree_size(trainable)
         self.history: List[dict] = []
         self._rng = jax.random.PRNGKey(ec.seed + 1)
@@ -79,11 +116,10 @@ class FederatedTrainer:
                 cfc = dataclasses.replace(
                     base_fc, preference=fc.client_preferences[c])
             self._client_fcs.append(cfc)
-        self._jit_steps = [
-            jax.jit(partial(local_lib.firm_local_step, cfg, cfc))
-            for cfc in self._client_fcs]
+        self._jit_steps = [_jit_local_step(cfg, cfc)
+                           for cfc in self._client_fcs]
         self._jit_step = self._jit_steps[0]
-        self._jit_ref_lp = jax.jit(self._ref_logprobs)
+        self._jit_ref_lp = partial(_jit_ref_logprobs(cfg), self.ref_params)
 
     # ------------------------------------------------------------------
     def _fc_for_algorithm(self) -> FIRMConfig:
@@ -91,10 +127,6 @@ class FederatedTrainer:
         if self.ec.algorithm == "firm_unreg":
             fc = dataclasses.replace(fc, beta=0.0)
         return fc
-
-    def _ref_logprobs(self, tokens):
-        out = transformer.forward_seq(self.cfg, self.ref_params, tokens)
-        return ppo.token_logprobs(out["logits"], tokens)
 
     def _next_key(self):
         self._rng, k = jax.random.split(self._rng)
@@ -121,14 +153,26 @@ class FederatedTrainer:
                                 replace=False)
         return sorted(int(i) for i in idx)
 
+    def _grad_codec(self):
+        """Codec for per-step gradient uploads (fedcmoo/linear): error
+        feedback is defined per client *stream*, not per objective, so the
+        M parallel gradient trees use the EF-stripped inner codec."""
+        ul = self.uplink_codec
+        return ul.inner if isinstance(ul, ErrorFeedback) else ul
+
     def run_round(self) -> dict:
         fc = self._fc_for_algorithm()
         participants = self._sample_participants()
-        # broadcast θ_t to participating clients
+        # broadcast θ_t through the downlink codec; every client receives
+        # (and trains from) the same decoded broadcast
+        dl_payload, self._downlink_state, broadcast = \
+            self.downlink_codec.roundtrip(
+                self.global_trainable, self._downlink_state,
+                key=self._next_key())
         for c in participants:
             self.client_states[c] = self.client_states[c]._replace(
-                trainable=self.global_trainable)
-            self.ledger.send_down(self.global_trainable)
+                trainable=broadcast)
+            self.ledger.send_down(dl_payload)
         round_metrics = []
         if self.ec.algorithm in ("firm", "firm_unreg"):
             for k in range(fc.local_steps):
@@ -139,19 +183,28 @@ class FederatedTrainer:
                     m["client"] = c
                     round_metrics.append(m)
         elif self.ec.algorithm == "fedcmoo":
+            grad_codec = self._grad_codec()
             for k in range(fc.local_steps):
                 per_client = []
+                server_grads = []
                 for c in participants:
                     batch = self._make_batch(c)
                     grads, losses, extras = local_lib.fedcmoo_local_grads(
                         self.cfg, fc, self.client_states[c], self.frozen,
                         batch)
                     per_client.append((grads, extras, batch.rewards.mean(0)))
-                    # gradients go up every local step: the O(CMd) cost
+                    # gradients go up every local step: the O(CMd) cost;
+                    # the server solves λ from what it actually receives
+                    # (codec error feeds the q-term, Askin et al. Rmk 4.6)
+                    received = []
                     for g in grads:
-                        self.ledger.send_up(g)
+                        gp, _, dec = grad_codec.roundtrip(
+                            g, key=self._next_key())
+                        self.ledger.send_up(gp)
+                        received.append(dec)
+                    server_grads.append(received)
                 lam = fedcmoo.fedcmoo_round_lambda(
-                    [g for g, _, _ in per_client],
+                    server_grads,
                     compress_rank=self.ec.fedcmoo_compress_rank,
                     key=self._next_key())
                 for ci, c in enumerate(participants):
@@ -179,11 +232,22 @@ class FederatedTrainer:
         else:
             raise ValueError(self.ec.algorithm)
 
-        # participating clients transmit adapted params; server FedAvgs
+        # participating clients transmit adapted-param deltas through the
+        # uplink codec (residuals stay client-local); the server FedAvgs
+        # the decoded deltas on top of the broadcast it anchored them to
+        decoded_deltas = []
         for c in participants:
-            self.ledger.send_up(self.client_states[c].trainable)
-        self.global_trainable = fedavg.fedavg(
-            [self.client_states[c].trainable for c in participants])
+            delta = jax.tree_util.tree_map(
+                lambda a, b: a - b, self.client_states[c].trainable,
+                broadcast)
+            payload, self._uplink_state[c], dec = \
+                self.uplink_codec.roundtrip(
+                    delta, self._uplink_state[c], key=self._next_key())
+            self.ledger.send_up(payload)
+            decoded_deltas.append(dec)
+        mean_delta = fedavg.fedavg(decoded_deltas)
+        self.global_trainable = jax.tree_util.tree_map(
+            lambda b, d: b + d, broadcast, mean_delta)
         self.ledger.next_round()
 
         lams = jnp.stack([np.asarray(m["lam"]) for m in round_metrics
@@ -199,6 +263,8 @@ class FederatedTrainer:
             "kl": float(np.mean([np.asarray(m["kl"])
                                  for m in round_metrics])),
             "comm_bytes": self.ledger.total,
+            "up_bytes": self.ledger.up_bytes,
+            "down_bytes": self.ledger.down_bytes,
             "participants": participants,
             "per_client_lam": np.asarray(lams),
         }

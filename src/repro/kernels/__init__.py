@@ -4,6 +4,8 @@ gram            — (M, d) gradient Gram matrix (MGDA input, Eq. 2)
 ssd             — Mamba2 SSD chunked scan (state resident in VMEM)
 flash_attention — GQA blockwise-softmax attention forward
 rmsnorm         — fused RMSNorm
+quantize        — blockwise int8/int4 stochastic quantize / dequantize and
+                  the threshold-refinement top-k passes (comms codecs)
 
 Each kernel has its pure-jnp oracle in ref.py and a dispatch wrapper in
 ops.py; validation runs in interpret mode on CPU (tests/test_kernels.py).

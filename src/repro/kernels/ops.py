@@ -61,3 +61,56 @@ def ssd_scan(x, bmat, cmat, dt, da, *, chunk: int = 128,
     from repro.kernels import ssd as _ssd
     return _ssd.ssd_scan(x, bmat, cmat, dt, da, chunk=chunk,
                          interpret=_interpret())
+
+
+# --------------------------------------------------- comms codec kernels
+def quantize(x2, bits, qmax: int = 127, use_pallas: bool = True):
+    """(R, B) f32 + uint32 rounding bits -> (int8 codes, (R, 1) scales)."""
+    if not use_pallas:
+        return ref.quantize(x2, bits, qmax)
+    from repro.kernels import quantize as _q
+    return _q.quantize(x2, bits, qmax=qmax, interpret=_interpret())
+
+
+def dequantize(codes, scales, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.dequantize(codes, scales)
+    from repro.kernels import quantize as _q
+    return _q.dequantize(codes, scales, interpret=_interpret())
+
+
+def abs_threshold_count(x2, thresh, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.abs_threshold_count(x2, thresh)
+    from repro.kernels import quantize as _q
+    return _q.abs_threshold_count(x2, jnp.asarray(thresh, jnp.float32),
+                                  interpret=_interpret())
+
+
+def abs_threshold_mask(x2, thresh, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.abs_threshold_mask(x2, thresh)
+    from repro.kernels import quantize as _q
+    return _q.abs_threshold_mask(x2, jnp.asarray(thresh, jnp.float32),
+                                 interpret=_interpret())
+
+
+def topk_threshold(x2, k: int, iters: int = 32, use_pallas: bool = True):
+    """Magnitude threshold bracket for top-k selection via bisection.
+
+    The TPU-friendly top-k selection: ``iters`` streaming count passes
+    (O(d) each, no sort).  Returns (lo, hi) with the invariant
+    count(|x| >= lo) >= k > count(|x| >= hi) whenever such a bracket
+    exists (count at hi may exceed k only if every entry ties at the
+    max).  Entries with |x| >= hi are definite top-k members; entries in
+    [lo, hi) are boundary ties that fill the remaining slots.
+    """
+    lo = jnp.float32(0.0)
+    hi = jnp.nextafter(jnp.max(jnp.abs(x2.astype(jnp.float32))),
+                       jnp.float32(jnp.inf))
+    kf = jnp.float32(k)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        cnt = abs_threshold_count(x2, mid, use_pallas=use_pallas)
+        lo, hi = jnp.where(cnt >= kf, mid, lo), jnp.where(cnt >= kf, hi, mid)
+    return lo, hi

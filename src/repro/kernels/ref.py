@@ -44,6 +44,34 @@ def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5
     return ((xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g)
 
 
+def quantize(x2: jnp.ndarray, bits: jnp.ndarray, qmax: int = 127):
+    """Blockwise symmetric quantization oracle.
+
+    x2: (R, B) f32; bits: (R, B) uint32 rounding offsets (2**31 = exactly
+    round-to-nearest).  Returns ((R, B) int8 codes, (R, 1) f32 scales).
+    """
+    x = x2.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    r = bits.astype(jnp.float32) * (2.0 ** -32)
+    q = jnp.clip(jnp.floor(x / scale + r), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scales
+
+
+def abs_threshold_count(x2: jnp.ndarray, thresh) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(x2.astype(jnp.float32)) >= thresh
+                   ).astype(jnp.float32)
+
+
+def abs_threshold_mask(x2: jnp.ndarray, thresh) -> jnp.ndarray:
+    x = x2.astype(jnp.float32)
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
 def ssd_scan(x, bmat, cmat, dt, da):
     """Exact SSD recurrence oracle (per-step scan).
 

@@ -50,7 +50,10 @@ def _tiny_trainer(algorithm, **kw):
     return FederatedTrainer(cfg, fc, ec)
 
 
-@pytest.mark.parametrize("alg", ["firm", "firm_unreg", "fedcmoo", "linear"])
+@pytest.mark.parametrize("alg", [
+    "firm", "firm_unreg",
+    pytest.param("fedcmoo", marks=pytest.mark.slow),
+    pytest.param("linear", marks=pytest.mark.slow)])
 def test_engine_round_all_algorithms(alg):
     tr = _tiny_trainer(alg)
     s = tr.run(1)[-1]
@@ -59,6 +62,7 @@ def test_engine_round_all_algorithms(alg):
     assert s["comm_bytes"] > 0
 
 
+@pytest.mark.slow
 def test_engine_measured_comm_ratio():
     """Measured ledger bytes: FedCMOO sends M gradients per local step on
     top of the param sync -> strictly more than FIRM."""
@@ -79,6 +83,7 @@ def test_engine_heterogeneous_rms_runs():
     assert np.isfinite(s["rewards"]).all()
 
 
+@pytest.mark.slow
 def test_fedcmoo_single_lambda_shared():
     tr = _tiny_trainer("fedcmoo")
     s = tr.run(1)[-1]
@@ -129,6 +134,7 @@ def test_checkpoint_roundtrip(tmp_path):
                                    np.asarray(b, np.float32))
 
 
+@pytest.mark.slow
 def test_firm_beta_reduces_drift_vs_unreg():
     """RQ2 at micro scale: over a few rounds, the regularized run keeps
     client lambdas closer together than beta=0."""
@@ -152,6 +158,7 @@ def test_partial_participation():
     assert s["per_client_lam"].shape == (2, 2)
 
 
+@pytest.mark.slow
 def test_pluralistic_client_preferences():
     """Beyond-paper (paper §6 future work): per-client preference vectors
     steer each client's lambda independently."""

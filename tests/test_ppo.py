@@ -78,6 +78,7 @@ def _tiny_setup():
     return cfg, fc, trainable, frozen, critic, batch
 
 
+@pytest.mark.slow
 def test_per_objective_grads_match_individual_jax_grad():
     """The shared-forward M-pull VJP == M independent jax.grad calls."""
     cfg, fc, trainable, frozen, critic, batch = _tiny_setup()

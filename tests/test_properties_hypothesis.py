@@ -1,0 +1,53 @@
+"""Property-based tests (hypothesis). The whole module skips cleanly when
+hypothesis is not installed (see requirements-dev.txt); the deterministic
+twins of these invariants live in test_kernels.py / test_mgda.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+
+from repro.core import mgda  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.gram import gram_pallas  # noqa: E402
+
+settings = hypothesis.settings(max_examples=40, deadline=None)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(m=st.integers(1, 8), d=st.integers(1, 3000),
+                  seed=st.integers(0, 99))
+def test_gram_property(m, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    got = np.asarray(gram_pallas(x, interpret=True))
+    np.testing.assert_allclose(got, np.asarray(ref.gram(x)),
+                               rtol=1e-4, atol=1e-4)
+    # PSD + symmetry invariants
+    np.testing.assert_allclose(got, got.T, atol=1e-5)
+    assert np.linalg.eigvalsh(got).min() > -1e-3
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.float64, (5,),
+                             elements=st.floats(-10, 10)))
+def test_project_simplex_is_projection(v):
+    p = np.asarray(mgda.project_simplex(jnp.asarray(v, jnp.float32)))
+    assert abs(p.sum() - 1.0) < 1e-5
+    assert (p >= -1e-7).all()
+    p2 = np.asarray(mgda.project_simplex(jnp.asarray(p)))
+    np.testing.assert_allclose(p, p2, atol=1e-5)
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.float64, (4,), elements=st.floats(-5, 5)),
+                  hnp.arrays(np.float64, (4,), elements=st.floats(0, 1)))
+def test_project_simplex_is_nearest(v, w):
+    """Projection is closer to v than any other simplex point."""
+    hypothesis.assume(w.sum() > 0.1)
+    v = jnp.asarray(v, jnp.float32)
+    p = mgda.project_simplex(v)
+    q = jnp.asarray(w / max(w.sum(), 1e-9), jnp.float32)
+    assert float(jnp.sum((p - v) ** 2)) <= float(jnp.sum((q - v) ** 2)) + 1e-4

@@ -63,6 +63,7 @@ def test_lora_only_communication():
     assert d_adapters < 0.01 * d_total  # <1% of the model is communicated
 
 
+@pytest.mark.slow
 def test_preference_changes_lambda():
     """RQ3: preferring objective 0 raises its average MGDA weight."""
     base = _trainer(beta=0.05)
@@ -98,6 +99,7 @@ def test_descent_direction_property():
         assert inner.min() >= -1e-3
 
 
+@pytest.mark.slow
 def test_three_objectives_end_to_end():
     """A.2.3: M=3 (helpfulness, harmlessness, conciseness) runs."""
     cfg = get_config("llama-3.2-1b").reduced(n_layers=2, d_model=64,
@@ -110,6 +112,7 @@ def test_three_objectives_end_to_end():
     assert abs(float(np.sum(s["lam_mean"])) - 1.0) < 1e-3
 
 
+@pytest.mark.slow
 def test_client_scaling_shapes():
     """Larger client pools (paper A.2.2) run a round cleanly."""
     tr = _trainer(n_clients=4)
