@@ -1,0 +1,63 @@
+"""Round-engine throughput: per-client loop vs vectorized round engine.
+
+Measures rounds/sec and engine-level jitted dispatch counts for the firm
+algorithm at C ∈ {4, 8, 16} on both paths, and emits a machine-readable
+``BENCH_round_throughput.json`` next to the CSV rows (CI uploads it as an
+artifact on main) — the baseline for the bench trajectory.
+
+The loop path runs C × K × 3 jitted dispatches per round (generate, ref
+logprobs, local step per client-step); the vectorized path fuses the
+entire local phase into one scanned/vmapped jit, so at toy model sizes
+rounds are dispatch-bound on the loop and compute-bound on the vmap.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import make_trainer, row
+
+CLIENT_COUNTS = (4, 8, 16)
+LOCAL_STEPS = 2
+TIMED_ROUNDS = 5
+
+
+def _measure(vectorized: bool, n_clients: int) -> dict:
+    tr = make_trainer("firm", n_clients=n_clients, m=2,
+                      local_steps=LOCAL_STEPS, batch=2,
+                      vectorized=vectorized)
+    tr.run(1)                                   # compile/warmup round
+    d0 = tr.jit_dispatches
+    t0 = time.perf_counter()
+    tr.run(TIMED_ROUNDS)
+    dt = time.perf_counter() - t0
+    return {
+        "rounds_per_sec": TIMED_ROUNDS / dt,
+        "us_per_round": dt / TIMED_ROUNDS * 1e6,
+        "dispatches_per_round": (tr.jit_dispatches - d0) / TIMED_ROUNDS,
+    }
+
+
+def bench_round_throughput():
+    results = {"algorithm": "firm", "local_steps": LOCAL_STEPS,
+               "timed_rounds": TIMED_ROUNDS, "clients": {}}
+    rows = []
+    for c in CLIENT_COUNTS:
+        loop = _measure(False, c)
+        vec = _measure(True, c)
+        speedup = loop["us_per_round"] / vec["us_per_round"]
+        results["clients"][str(c)] = {
+            "loop": loop, "vectorized": vec, "speedup": speedup}
+        rows.append(row(
+            f"round_throughput_c{c}", vec["us_per_round"],
+            {"speedup": speedup,
+             "loop_us": loop["us_per_round"],
+             "vec_us": vec["us_per_round"],
+             "loop_dispatches": loop["dispatches_per_round"],
+             "vec_dispatches": vec["dispatches_per_round"]}))
+    with open("BENCH_round_throughput.json", "w") as f:
+        json.dump(results, f, indent=2)
+    return rows
+
+
+ALL = [bench_round_throughput]

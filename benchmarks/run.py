@@ -9,6 +9,7 @@ Groups:
   theory_checks  — Thm 4.5 drift scaling, Lemma F.6, linear speedup
   kernels_micro  — kernel microbenches + Pallas oracle agreement
   codec_tradeoff — reward-vs-measured-bytes Pareto sweep (comms codecs)
+  round_throughput — loop vs vectorized round engine (rounds/sec, dispatches)
   roofline       — per-(arch x shape x mesh) roofline from the dry-run
 """
 from __future__ import annotations
@@ -25,10 +26,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (codec_tradeoff, compression_error, kernels_micro,
-                            paper_figures, roofline_report, theory_checks)
+                            paper_figures, roofline_report,
+                            round_throughput, theory_checks)
     benches = (paper_figures.ALL + theory_checks.ALL + kernels_micro.ALL +
                compression_error.ALL + codec_tradeoff.ALL +
-               roofline_report.ALL)
+               round_throughput.ALL + roofline_report.ALL)
     filters = [f for f in args.only.split(",") if f]
 
     print("name,us_per_call,derived")

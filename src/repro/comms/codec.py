@@ -100,14 +100,18 @@ class Codec:
         """Analytic uplink cost model (exact for the buffer layout)."""
         raise NotImplementedError
 
+    def _flat_payload(self, flat: jnp.ndarray, spec: "TreeSpec", *,
+                      key=None) -> Payload:
+        arrays, meta = self.encode_flat(flat, key=key)
+        meta["spec"] = spec
+        meta["d"] = int(flat.size)
+        return Payload(self.name, arrays, meta)
+
     # -- pytree API -----------------------------------------------------
     def encode(self, tree, state=None, *, key=None
                ) -> Tuple[Payload, Optional[Any]]:
         flat, spec = tree_to_flat(tree)
-        arrays, meta = self.encode_flat(flat, key=key)
-        meta["spec"] = spec
-        meta["d"] = int(flat.size)
-        return Payload(self.name, arrays, meta), state
+        return self._flat_payload(flat, spec, key=key), state
 
     def decode(self, payload: Payload):
         flat = self.decode_flat(payload)[:payload.meta["d"]]
@@ -122,6 +126,20 @@ class Codec:
         """
         payload, new_state = self.encode(tree, state, key=key)
         return payload, new_state, self.decode(payload)
+
+    # -- pre-flattened API ----------------------------------------------
+    def roundtrip_flat(self, flat: jnp.ndarray, spec: "TreeSpec",
+                       state=None, *, key=None):
+        """Per-client Payload boundary for pre-flattened uplinks.
+
+        The vectorized engine flattens all C client deltas in ONE batched
+        tree op and hands each codec a (d,) f32 row plus the shared
+        ``TreeSpec``, skipping C per-client ``tree_to_flat``/
+        ``flat_to_tree`` passes.  Returns (payload, new_state,
+        decoded_flat) — byte-identical payloads to ``roundtrip``.
+        """
+        payload = self._flat_payload(flat, spec, key=key)
+        return payload, state, self.decode_flat(payload)[:flat.size]
 
 
 class IdentityCodec(Codec):
@@ -152,16 +170,16 @@ class ErrorFeedback(Codec):
         self.inner = inner
         self.name = inner.name + "+ef"
 
-    def _encode_with_decoded(self, tree, state, key):
-        flat, spec = tree_to_flat(tree)
+    def _encode_flat_with_decoded(self, flat, spec, state, key):
         if state is not None:
             flat = flat + state
-        arrays, meta = self.inner.encode_flat(flat, key=key)
-        meta["spec"] = spec
-        meta["d"] = int(flat.size)
-        payload = Payload(self.inner.name, arrays, meta)
+        payload = self.inner._flat_payload(flat, spec, key=key)
         decoded = self.inner.decode_flat(payload)[:flat.size]
         return payload, flat - decoded, decoded
+
+    def _encode_with_decoded(self, tree, state, key):
+        flat, spec = tree_to_flat(tree)
+        return self._encode_flat_with_decoded(flat, spec, state, key)
 
     def encode(self, tree, state=None, *, key=None):
         payload, residual, _ = self._encode_with_decoded(tree, state, key)
@@ -172,6 +190,11 @@ class ErrorFeedback(Codec):
             tree, state, key)
         return payload, residual, flat_to_tree(decoded,
                                                payload.meta["spec"])
+
+    def roundtrip_flat(self, flat, spec, state=None, *, key=None):
+        payload, residual, decoded = self._encode_flat_with_decoded(
+            flat, spec, state, key)
+        return payload, residual, decoded
 
     def decode(self, payload: Payload):
         return self.inner.decode(payload)

@@ -66,3 +66,28 @@ def param_drift(client_trees: Sequence) -> jnp.ndarray:
             total = total + jnp.linalg.norm(flats[i] - flats[j])
             n += 1
     return total / max(n, 1)
+
+
+def param_drift_stacked(stacked_tree) -> jnp.ndarray:
+    """``param_drift`` over a stacked pytree with a leading client axis.
+
+    One jittable program (no per-pair dispatches), device-resident for
+    the vectorized engine's once-per-round host transfer.  Distances are
+    computed subtract-first row-by-row — O(Cd) peak memory instead of a
+    (C, C, d) broadcast, and none of the Gram-identity cancellation that
+    matters when clients have drifted only slightly apart.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_tree)
+    c = leaves[0].shape[0]
+    if c < 2:
+        return jnp.zeros(())
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(c, -1)
+                            for l in leaves], axis=1)          # (C, d)
+
+    def row(i, acc):
+        # distances from client i to everyone (the i==i term is 0)
+        d2 = jnp.sum((flat - flat[i]) ** 2, -1)                # (C,)
+        return acc + jnp.sqrt(d2).sum()
+
+    total = jax.lax.fori_loop(0, c, row, jnp.zeros((), jnp.float32))
+    return total / 2.0 / (c * (c - 1) // 2)

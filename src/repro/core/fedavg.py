@@ -25,6 +25,25 @@ def fedavg_weighted(trees: Sequence, weights: Sequence[float]):
     return out
 
 
+def stack_trees(trees: Sequence):
+    """C identically-structured pytrees -> one pytree with a leading client
+    axis — the stacked-client representation of the vectorized engine."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, n: int):
+    """Inverse of ``stack_trees``: split the leading client axis back into
+    a list of n per-client pytrees."""
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], tree)
+            for i in range(n)]
+
+
+def fedavg_stacked(stacked):
+    """θ ← (1/C) Σ_c θ_c over the leading client axis in one batched tree
+    op (the vectorized form of ``fedavg``)."""
+    return jax.tree_util.tree_map(lambda x: x.mean(axis=0), stacked)
+
+
 def fedavg_collective(tree, axis_name: str = "pod"):
     """Cross-pod FedAvg as a single all-reduce (the O(Cd) collective).
 

@@ -29,16 +29,23 @@ class ResolveResult(NamedTuple):
 def resolve(grads: Sequence, fc: FIRMConfig,
             prev_lam: Optional[jnp.ndarray] = None,
             eta: Optional[jnp.ndarray] = None,
-            gram_fn=None) -> ResolveResult:
+            gram_fn=None,
+            preference: Optional[jnp.ndarray] = None) -> ResolveResult:
     """Resolve M per-objective gradients into one direction (Eq. 1).
 
     grads: list of M gradient pytrees (or stacked (M, d) array).
     prev_lam/eta: λ smoothing state (Alg. 2 Eq. 12); eta=1 disables.
     gram_fn: override for the Gram computation (e.g. the Pallas kernel).
+    preference: (M,) array overriding ``fc.preference`` — a *traced*
+        preference vector, so per-client p vectors can ride one vmapped
+        trace instead of forcing a retrace per static config.
     """
     G = (gram_fn or mgda.gram_matrix)(grads)
-    pref = (jnp.asarray(fc.preference, jnp.float32)
-            if fc.preference is not None else None)
+    if preference is not None:
+        pref = jnp.asarray(preference, jnp.float32)
+    else:
+        pref = (jnp.asarray(fc.preference, jnp.float32)
+                if fc.preference is not None else None)
     lam_star = mgda.solve(G, fc.beta, preference=pref,
                           trace_normalize=fc.trace_normalize,
                           solver=fc.solver, iters=fc.solver_iters)

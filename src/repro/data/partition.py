@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.data.prompts import N_TOPICS, PromptDataset
+from repro.data.prompts import N_TOPICS, PromptDataset, sample_prompts
 
 
 def dirichlet_topic_mixtures(n_clients: int, alpha: float = 0.3,
@@ -22,6 +22,31 @@ def make_client_datasets(n_clients: int, vocab: int, prompt_len: int,
     mix = dirichlet_topic_mixtures(n_clients, alpha, seed=seed)
     return [PromptDataset(vocab, prompt_len, mix[c], seed=seed * 1000 + c)
             for c in range(n_clients)]
+
+
+def sample_prompt_block(seeds: jnp.ndarray, counts: jnp.ndarray,
+                        topic_probs: jnp.ndarray, batch_size: int,
+                        prompt_len: int, vocab: int) -> jnp.ndarray:
+    """Batched per-client prompt sampling: one vmapped draw -> (C, B, P).
+
+    ``seeds``/``counts`` are (C,) int32 and ``topic_probs`` is (C, T).
+    Reproduces each client's ``PromptDataset.next_batch`` stream exactly —
+    client c's keys derive from fold_in(PRNGKey(seeds[c]), counts[c]) and
+    the per-client topic logits use the same per-dataset seed — so the
+    vectorized engine's rollouts match the per-client loop bit-for-bit.
+    Jit-safe: embed in a jitted round body with traced counts.
+    """
+
+    def one(seed, count, probs):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+        kt, kp = jax.random.split(key)
+        topics = jax.random.categorical(
+            kt, jnp.log(probs + 1e-9)[None].repeat(batch_size, 0))
+        return sample_prompts(kp, topics, prompt_len, vocab, seed=seed)
+
+    return jax.vmap(one)(jnp.asarray(seeds, jnp.int32),
+                         jnp.asarray(counts, jnp.int32),
+                         jnp.asarray(topic_probs, jnp.float32))
 
 
 def heterogeneity_stat(mixtures: jnp.ndarray) -> jnp.ndarray:

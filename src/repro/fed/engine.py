@@ -15,6 +15,31 @@ All uplink/downlink traffic flows through the repro.comms codec layer
 upload encoded *deltas* against the decoded broadcast they trained from,
 error-feedback residuals stay client-local, and the ledger records the
 measured Payload bytes (int8 uplink ≈ 1/4 of raw f32).
+
+Round execution (vectorized round engine)
+-----------------------------------------
+Two interchangeable local-phase paths:
+
+* **vectorized** (default, ``EngineConfig.vectorized_clients``):
+  participant ``ClientState``s are held as ONE pytree with a leading
+  client axis; prompt sampling (``data.partition.sample_prompt_block``),
+  rollout generation, reward scoring (banded, per-client parameters),
+  reference logprobs and the local update are all ``jax.vmap``ed over
+  that axis, and the K local steps run under one ``jax.lax.scan`` — the
+  entire local phase is a single jitted dispatch with the stacked state
+  donated.  Per-step metrics (stacked λ / KL / rewards) stay
+  device-resident and transfer to host once per round.  The client→server
+  delta and FedAvg are single batched tree ops over the stacked axis.
+* **per-client loop**: the original Python loop (C × K dispatches), kept
+  for equivalence testing and as the fallback when per-client configs
+  diverge statically.
+
+vmap groups clients by IDENTICAL static config: every participant must
+share one ``FIRMConfig`` once ``preference`` is lifted to a traced
+(C, M) array (``client_preferences`` all set, or none) — any other
+per-client static divergence (e.g. mixed solvers) falls back to the
+loop path.  The comms codec stays per-client at the Payload boundary in
+both paths; vmapping the codec encode itself is a recorded follow-up.
 """
 from __future__ import annotations
 
@@ -25,12 +50,12 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.comms import ErrorFeedback, make_codec
+from repro.comms import codec as codec_lib
 from repro.configs.base import FIRMConfig, ModelConfig
 from repro.core import comms, drift, fedavg, fedcmoo
-from repro.data.partition import make_client_datasets
+from repro.data.partition import make_client_datasets, sample_prompt_block
 from repro.models import transformer
 from repro.models.common import merge_trainable, split_trainable, tree_size
 from repro.rlhf import local as local_lib
@@ -44,7 +69,11 @@ from repro.rlhf.sampling import generate
 # dozens of identically-configured trainers.
 @functools.lru_cache(maxsize=None)
 def _jit_local_step(cfg: ModelConfig, cfc: FIRMConfig):
-    return jax.jit(partial(local_lib.firm_local_step, cfg, cfc))
+    # the client-state argument is donated: its buffers are reused for the
+    # updated state in place.  Callers must pass states whose buffers are
+    # not aliased elsewhere (the engine adopts the broadcast by copy).
+    return jax.jit(partial(local_lib.firm_local_step, cfg, cfc),
+                   donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -53,6 +82,148 @@ def _jit_ref_logprobs(cfg: ModelConfig):
         out = transformer.forward_seq(cfg, ref_params, tokens)
         return ppo.token_logprobs(out["logits"], tokens)
     return jax.jit(ref_lp)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sample_block(batch_size: int, prompt_len: int, vocab: int):
+    return jax.jit(lambda seeds, counts, probs: sample_prompt_block(
+        seeds, counts, probs, batch_size, prompt_len, vocab))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+                   prompt_len: int, max_new: int, length_tol: int,
+                   has_pref: bool):
+    """One round's entire local phase as a single jitted program.
+
+    vmap over the stacked client axis x lax.scan over the K local steps:
+    sampling, generation, reward scoring, reference logprobs and the
+    local update all fuse into one dispatch.  The stacked client state
+    (arg 0) is donated.
+    """
+    k_steps = cfc.local_steps
+    m = cfc.n_objectives
+    b = cfc.batch_size
+
+    def round_fn(state, frozen, ref_params, seeds, counts0, probs,
+                 band_h, band_x, gen_keys, pref, lin_w):
+
+        def one_client(st, prompts, key, bh, bx, p):
+            params = merge_trainable(st.trainable, frozen)
+            tokens, old_lp, mask = generate(cfg, params, prompts, key,
+                                            max_new=max_new)
+            r = rewards_lib.score_batch_banded(bh, bx, tokens, mask, m,
+                                               length_tol)
+            ref_out = transformer.forward_seq(cfg, ref_params, tokens)
+            ref_lp = ppo.token_logprobs(ref_out["logits"], tokens)
+            batch = ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
+            if algorithm == "linear":
+                return local_lib.linear_local_step(cfg, cfc, st, frozen,
+                                                   batch, lin_w)
+            return local_lib.firm_local_step(cfg, cfc, st, frozen, batch,
+                                             preference=p)
+
+        vstep = jax.vmap(one_client,
+                         in_axes=(0, 0, 0, 0, 0, 0 if has_pref else None))
+
+        def body(carry, xs):
+            step_idx, keys_c = xs
+            prompts = sample_prompt_block(seeds, counts0 + step_idx, probs,
+                                          b, prompt_len, cfg.vocab)
+            new_state, metrics = vstep(carry, prompts, keys_c, band_h,
+                                       band_x, pref)
+            keep = {k: metrics[k] for k in ("lam", "rewards", "kl")}
+            return new_state, keep
+
+        final, ms = jax.lax.scan(body, state,
+                                 (jnp.arange(k_steps), gen_keys))
+        return final, ms
+
+    return jax.jit(round_fn, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_vec_fedcmoo_grads(cfg: ModelConfig, cfc: FIRMConfig, max_new: int,
+                           length_tol: int):
+    """FedCMOO client phase 1, vmapped: rollouts + M gradients for every
+    participant in one dispatch.  Gradients return stacked so the server
+    exchange (per-client codec Payloads + one λ solve) stays at the host
+    boundary between the two jitted phases."""
+    m = cfc.n_objectives
+
+    def fn(state, frozen, ref_params, prompts, keys, band_h, band_x):
+        def one(st, pr, key, bh, bx):
+            params = merge_trainable(st.trainable, frozen)
+            tokens, old_lp, mask = generate(cfg, params, pr, key,
+                                            max_new=max_new)
+            r = rewards_lib.score_batch_banded(bh, bx, tokens, mask, m,
+                                               length_tol)
+            ref_out = transformer.forward_seq(cfg, ref_params, tokens)
+            ref_lp = ppo.token_logprobs(ref_out["logits"], tokens)
+            batch = ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
+            grads, losses, extras = local_lib.fedcmoo_local_grads(
+                cfg, cfc, st, frozen, batch)
+            return grads, extras, batch.rewards.mean(0)
+
+        return jax.vmap(one)(state, prompts, keys, band_h, band_x)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_vec_fedcmoo_apply(cfc: FIRMConfig):
+    """FedCMOO client phase 2, vmapped, with the stacked state donated."""
+
+    def fn(state, grads, lam, extras):
+        def one(st, g, e):
+            return local_lib.fedcmoo_local_apply(cfc, st, g, lam, e)
+
+        return jax.vmap(one)(state, grads, extras)
+
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_unstack(n: int):
+    return jax.jit(lambda tree: tuple(fedavg.unstack_tree(tree, n)))
+
+
+_stack_trees_jit = jax.jit(lambda *trees: fedavg.stack_trees(trees))
+
+# all C client deltas vs the broadcast anchor flattened in ONE batched
+# tree op -> (C, d) f32; row c is bit-identical to tree_to_flat(delta_c)
+_delta_flat_jit = jax.jit(lambda stacked, anchor: jnp.concatenate(
+    [(a - b).astype(jnp.float32).reshape(a.shape[0], -1)
+     for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                     jax.tree_util.tree_leaves(anchor))], axis=1))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_flat_aggregate(spec):
+    """FedAvg of the decoded flat deltas over the stacked client axis +
+    apply to the broadcast anchor, in one dispatch (one unflatten total
+    instead of one per client)."""
+
+    def fn(anchor, *flats):
+        mean = fedavg.fedavg_stacked(jnp.stack(flats))
+        return jax.tree_util.tree_map(lambda b, d: b + d, anchor,
+                                      codec_lib.flat_to_tree(mean, spec))
+
+    return jax.jit(fn)
+
+
+@jax.jit
+def _summary_device(lams, rewards_mean, kl_mean, stacked_trainable):
+    """All round-summary statistics computed device-side; the engine does
+    ONE host transfer per round (jax.device_get of this dict)."""
+    return {
+        "rewards": rewards_mean,
+        "lam_mean": lams.mean(0),
+        "lam_disagreement": drift.lambda_disagreement(lams)["pairwise_mean"],
+        "param_drift": drift.param_drift_stacked(stacked_trainable),
+        "kl": kl_mean,
+        "per_client_lam": lams,
+    }
 
 
 @dataclasses.dataclass
@@ -68,6 +239,10 @@ class EngineConfig:
     # comms codecs (repro.comms registry specs, e.g. "int8+ef")
     uplink_codec: str = "identity"       # client -> server deltas/grads
     downlink_codec: str = "identity"     # server -> client broadcast
+    # run the round's local phase as one vmapped/scanned jit over the
+    # stacked client axis (falls back to the per-client loop when
+    # per-client static configs diverge; see module docstring)
+    vectorized_clients: bool = True
 
 
 class FederatedTrainer:
@@ -90,13 +265,31 @@ class FederatedTrainer:
         self.datasets = make_client_datasets(
             fc.n_clients, cfg.vocab, ec.prompt_len,
             alpha=ec.dirichlet_alpha, seed=ec.seed)
+        # static per-client sampler inputs, cached for the vmapped block
+        # sampler (only the per-client counts change between rounds)
+        self._seeds_all = jnp.asarray([ds.seed for ds in self.datasets],
+                                      jnp.int32)
+        self._probs_all = jnp.stack([ds.topic_probs
+                                     for ds in self.datasets])
+        # shared TreeSpec of the per-client delta (the uplink's flat
+        # Payload boundary)
+        leaves, treedef = jax.tree_util.tree_flatten(trainable)
+        self._delta_spec = codec_lib.TreeSpec(
+            treedef, tuple(l.shape for l in leaves),
+            tuple(l.dtype for l in leaves))
+        self._length_tol = max(4, ec.max_new // 2)
         self.reward_fns = []
+        bands = []
         for c in range(fc.n_clients):
             variant = ("alt" if ec.heterogeneous_rms and
                        c >= fc.n_clients // 2 else "default")
             self.reward_fns.append(rewards_lib.make_reward_fns(
                 cfg.vocab, fc.n_objectives, variant=variant,
-                length_tolerance=max(4, ec.max_new // 2)))
+                length_tolerance=self._length_tol))
+            bands.append(rewards_lib.variant_bands(cfg.vocab, variant))
+        # per-client reward-band parameters, stacked for the vmapped scorer
+        self._bands_h = jnp.stack([bh for bh, _ in bands])
+        self._bands_x = jnp.stack([bx for _, bx in bands])
         self.ledger = comms.CommsLedger()
         # comms codecs: one stateless codec per link; per-client error
         # feedback residuals stay in client-indexed slots here
@@ -118,8 +311,12 @@ class FederatedTrainer:
             self._client_fcs.append(cfc)
         self._jit_steps = [_jit_local_step(cfg, cfc)
                            for cfc in self._client_fcs]
-        self._jit_step = self._jit_steps[0]
         self._jit_ref_lp = partial(_jit_ref_logprobs(cfg), self.ref_params)
+        self._stacked_pref = (
+            jnp.asarray(fc.client_preferences, jnp.float32)
+            if fc.client_preferences is not None else None)
+        # engine-level jitted dispatch counter (round_throughput benchmark)
+        self.jit_dispatches = 0
 
     # ------------------------------------------------------------------
     def _fc_for_algorithm(self) -> FIRMConfig:
@@ -139,8 +336,10 @@ class FederatedTrainer:
         tokens, old_lp, mask = generate(self.cfg, params, prompts,
                                         self._next_key(),
                                         max_new=self.ec.max_new)
+        self.jit_dispatches += 1
         r = rewards_lib.score_batch(self.reward_fns[c], tokens, mask)
         ref_lp = self._jit_ref_lp(tokens)
+        self.jit_dispatches += 1
         return ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
 
     # ------------------------------------------------------------------
@@ -160,9 +359,32 @@ class FederatedTrainer:
         ul = self.uplink_codec
         return ul.inner if isinstance(ul, ErrorFeedback) else ul
 
+    def _use_vectorized(self) -> bool:
+        """Whether the stacked/vmapped local phase can serve this round.
+
+        vmap groups clients by identical static config: all per-client
+        FIRMConfigs must agree once ``preference`` is lifted to a traced
+        array (every client has a preference vector, or none does).
+        """
+        if not self.ec.vectorized_clients:
+            return False
+        if self.ec.algorithm not in ("firm", "firm_unreg", "fedcmoo",
+                                     "linear"):
+            return False
+        base = dataclasses.replace(self._client_fcs[0], preference=None)
+        if any(dataclasses.replace(f, preference=None) != base
+               for f in self._client_fcs[1:]):
+            return False
+        has = [f.preference is not None for f in self._client_fcs]
+        if any(has) and not all(has):
+            return False
+        return True
+
+    # ------------------------------------------------------------------
     def run_round(self) -> dict:
         fc = self._fc_for_algorithm()
         participants = self._sample_participants()
+        dispatch0 = self.jit_dispatches
         # broadcast θ_t through the downlink codec; every client receives
         # (and trains from) the same decoded broadcast
         dl_payload, self._downlink_state, broadcast = \
@@ -170,9 +392,66 @@ class FederatedTrainer:
                 self.global_trainable, self._downlink_state,
                 key=self._next_key())
         for c in participants:
-            self.client_states[c] = self.client_states[c]._replace(
-                trainable=broadcast)
             self.ledger.send_down(dl_payload)
+
+        if self._use_vectorized():
+            lams, rewards_mean, kl_mean, stacked_tr = \
+                self._local_phase_vectorized(fc, participants, broadcast)
+        else:
+            lams, rewards_mean, kl_mean, stacked_tr = \
+                self._local_phase_loop(fc, participants, broadcast)
+
+        # participating clients transmit adapted-param deltas through the
+        # uplink codec (residuals stay client-local); the delta against
+        # the broadcast anchor flattens in one batched tree op over the
+        # stacked axis, the codec runs per client at the (flat) Payload
+        # boundary, and the server FedAvgs the decoded deltas in one
+        # stacked mean + single unflatten
+        flat_deltas = _delta_flat_jit(stacked_tr, broadcast)
+        self.jit_dispatches += 1
+        decoded = []
+        for ci, c in enumerate(participants):
+            payload, self._uplink_state[c], dec = \
+                self.uplink_codec.roundtrip_flat(
+                    flat_deltas[ci], self._delta_spec,
+                    self._uplink_state[c], key=self._next_key())
+            self.ledger.send_up(payload)
+            decoded.append(dec)
+        self.global_trainable = _jit_flat_aggregate(self._delta_spec)(
+            broadcast, *decoded)
+        self.jit_dispatches += 1
+        self.ledger.next_round()
+
+        # metrics were accumulated on device; ONE host transfer per round
+        stats = _summary_device(lams, rewards_mean, kl_mean, stacked_tr)
+        self.jit_dispatches += 1
+        host = jax.device_get(stats)
+        summary = {
+            "rewards": host["rewards"],
+            "lam_mean": host["lam_mean"],
+            "lam_disagreement": float(host["lam_disagreement"]),
+            "param_drift": float(host["param_drift"]),
+            "kl": float(host["kl"]),
+            "comm_bytes": self.ledger.total,
+            "up_bytes": self.ledger.up_bytes,
+            "down_bytes": self.ledger.down_bytes,
+            "participants": participants,
+            "per_client_lam": host["per_client_lam"],
+            "dispatches": self.jit_dispatches - dispatch0,
+        }
+        self.history.append(summary)
+        return summary
+
+    # ------------------------------------------------- per-client loop path
+    def _local_phase_loop(self, fc: FIRMConfig, participants: List[int],
+                          broadcast):
+        # the jitted local step donates its state argument, so every
+        # participant must OWN its trainable buffers: adopt the broadcast
+        # by copy, never by alias (the anchor must survive for the delta,
+        # and clients must not share donated buffers)
+        for c in participants:
+            self.client_states[c] = self.client_states[c]._replace(
+                trainable=jax.tree_util.tree_map(jnp.copy, broadcast))
         round_metrics = []
         if self.ec.algorithm in ("firm", "firm_unreg"):
             for k in range(fc.local_steps):
@@ -180,6 +459,7 @@ class FederatedTrainer:
                     batch = self._make_batch(c)
                     self.client_states[c], m = self._jit_steps[c](
                         self.client_states[c], self.frozen, batch)
+                    self.jit_dispatches += 1
                     m["client"] = c
                     round_metrics.append(m)
         elif self.ec.algorithm == "fedcmoo":
@@ -232,44 +512,127 @@ class FederatedTrainer:
         else:
             raise ValueError(self.ec.algorithm)
 
-        # participating clients transmit adapted-param deltas through the
-        # uplink codec (residuals stay client-local); the server FedAvgs
-        # the decoded deltas on top of the broadcast it anchored them to
-        decoded_deltas = []
-        for c in participants:
-            delta = jax.tree_util.tree_map(
-                lambda a, b: a - b, self.client_states[c].trainable,
-                broadcast)
-            payload, self._uplink_state[c], dec = \
-                self.uplink_codec.roundtrip(
-                    delta, self._uplink_state[c], key=self._next_key())
-            self.ledger.send_up(payload)
-            decoded_deltas.append(dec)
-        mean_delta = fedavg.fedavg(decoded_deltas)
-        self.global_trainable = jax.tree_util.tree_map(
-            lambda b, d: b + d, broadcast, mean_delta)
-        self.ledger.next_round()
-
-        lams = jnp.stack([np.asarray(m["lam"]) for m in round_metrics
+        # metrics stay device-resident: stack on device, convert to host
+        # once per round in run_round's summary
+        lams = jnp.stack([m["lam"] for m in round_metrics
                           if "lam" in m][-len(participants):])
-        summary = {
-            "rewards": np.mean(np.stack(
-                [np.asarray(m["rewards"]) for m in round_metrics]), axis=0),
-            "lam_mean": np.asarray(lams.mean(0)),
-            "lam_disagreement": float(
-                drift.lambda_disagreement(lams)["pairwise_mean"]),
-            "param_drift": float(drift.param_drift(
-                [self.client_states[c].trainable for c in participants])),
-            "kl": float(np.mean([np.asarray(m["kl"])
-                                 for m in round_metrics])),
-            "comm_bytes": self.ledger.total,
-            "up_bytes": self.ledger.up_bytes,
-            "down_bytes": self.ledger.down_bytes,
-            "participants": participants,
-            "per_client_lam": np.asarray(lams),
-        }
-        self.history.append(summary)
-        return summary
+        rewards_mean = jnp.stack([m["rewards"]
+                                  for m in round_metrics]).mean(0)
+        kl_mean = jnp.stack([m["kl"] for m in round_metrics]).mean()
+        stacked_tr = _stack_trees_jit(
+            *[self.client_states[c].trainable for c in participants])
+        self.jit_dispatches += 1
+        return lams, rewards_mean, kl_mean, stacked_tr
+
+    # ------------------------------------------------- vectorized path
+    def _local_phase_vectorized(self, fc: FIRMConfig,
+                                participants: List[int], broadcast):
+        p_count = len(participants)
+        k_steps = fc.local_steps
+        m = fc.n_objectives
+        has_pref = self._stacked_pref is not None
+        cfc = dataclasses.replace(fc, preference=None) if has_pref else fc
+
+        counts0 = jnp.asarray([self.datasets[c]._count
+                               for c in participants], jnp.int32)
+        if p_count == self.fc.n_clients:     # full participation: cached
+            seeds, probs = self._seeds_all, self._probs_all
+            band_h, band_x = self._bands_h, self._bands_x
+            pref = self._stacked_pref if has_pref else None
+        else:
+            idx = jnp.asarray(participants, jnp.int32)
+            seeds, probs = self._seeds_all[idx], self._probs_all[idx]
+            band_h, band_x = self._bands_h[idx], self._bands_x[idx]
+            pref = self._stacked_pref[idx] if has_pref else None
+        # advance the per-client prompt streams exactly as the loop would
+        for c in participants:
+            self.datasets[c]._count += k_steps
+
+        # stacking copies the broadcast into a fresh (C, ...) buffer, so
+        # the stacked state is safe to donate and the anchor survives
+        states = [self.client_states[c]._replace(trainable=broadcast)
+                  for c in participants]
+        stacked = _stack_trees_jit(*states)
+        self.jit_dispatches += 1
+
+        if self.ec.algorithm == "fedcmoo":
+            lams, rewards_mean, kl_mean, stacked = self._vec_fedcmoo_steps(
+                cfc, participants, stacked, seeds, counts0, probs,
+                band_h, band_x)
+        else:
+            # per-client generation keys, drawn in the loop path's order
+            # (step-major, then participant order) for exact key parity
+            gen_keys = jnp.stack(
+                [jnp.stack([self._next_key() for _ in participants])
+                 for _ in range(k_steps)])
+            lin_w = None
+            if self.ec.algorithm == "linear":
+                lin_w = jnp.asarray(
+                    self.ec.linear_weights or [1.0 / m] * m, jnp.float32)
+            alg = "linear" if self.ec.algorithm == "linear" else "firm"
+            fn = _jit_vec_round(self.cfg, cfc, alg, self.ec.prompt_len,
+                                self.ec.max_new, self._length_tol, has_pref)
+            stacked, ms = fn(stacked, self.frozen, self.ref_params, seeds,
+                             counts0, probs, band_h, band_x, gen_keys,
+                             pref, lin_w)
+            self.jit_dispatches += 1
+            lams = ms["lam"][-1]                              # (C, M)
+            rewards_mean = ms["rewards"].reshape(-1, m).mean(0)
+            kl_mean = ms["kl"].mean()
+
+        new_states = _jit_unstack(p_count)(stacked)
+        self.jit_dispatches += 1
+        for ci, c in enumerate(participants):
+            self.client_states[c] = new_states[ci]
+        return lams, rewards_mean, kl_mean, stacked.trainable
+
+    def _vec_fedcmoo_steps(self, cfc: FIRMConfig, participants: List[int],
+                           stacked, seeds, counts0, probs, band_h, band_x):
+        """FedCMOO vectorized local phase: two jitted dispatches per step
+        (vmapped grads, vmapped apply) around the host-side server
+        exchange — per-client codec Payloads + one global λ solve."""
+        m = cfc.n_objectives
+        grad_codec = self._grad_codec()
+        grads_fn = _jit_vec_fedcmoo_grads(self.cfg, cfc, self.ec.max_new,
+                                          self._length_tol)
+        apply_fn = _jit_vec_fedcmoo_apply(cfc)
+        sampler = _jit_sample_block(cfc.batch_size, self.ec.prompt_len,
+                                    self.cfg.vocab)
+        lam_last, rew_hist, kl_hist = None, [], []
+        for k in range(cfc.local_steps):
+            # key parity with the loop path: per client, one batch key
+            # then M gradient-codec keys, interleaved in participant order
+            kb, kg = [], []
+            for _ in participants:
+                kb.append(self._next_key())
+                kg.append([self._next_key() for _ in range(m)])
+            prompts = sampler(seeds, counts0 + k, probs)
+            self.jit_dispatches += 1
+            grads, extras, rmean = grads_fn(
+                stacked, self.frozen, self.ref_params, prompts,
+                jnp.stack(kb), band_h, band_x)
+            self.jit_dispatches += 1
+            server_grads = []
+            for ci in range(len(participants)):
+                received = []
+                for j in range(m):
+                    g_c = jax.tree_util.tree_map(lambda x: x[ci], grads[j])
+                    gp, _, dec = grad_codec.roundtrip(g_c, key=kg[ci][j])
+                    self.ledger.send_up(gp)
+                    received.append(dec)
+                server_grads.append(received)
+            lam = fedcmoo.fedcmoo_round_lambda(
+                server_grads,
+                compress_rank=self.ec.fedcmoo_compress_rank,
+                key=self._next_key())
+            stacked, metrics = apply_fn(stacked, grads, lam, extras)
+            self.jit_dispatches += 1
+            lam_last = metrics["lam"]
+            rew_hist.append(rmean)
+            kl_hist.append(metrics["kl"])
+        rewards_mean = jnp.stack(rew_hist).reshape(-1, m).mean(0)
+        kl_mean = jnp.stack(kl_hist).mean()
+        return lam_last, rewards_mean, kl_mean, stacked
 
     def run(self, rounds: Optional[int] = None) -> List[dict]:
         for _ in range(rounds or self.fc.rounds):

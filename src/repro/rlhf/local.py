@@ -47,14 +47,20 @@ def init_client_state(trainable, m: int, d_model: int,
 
 def firm_local_step(cfg: ModelConfig, fc: FIRMConfig, state: ClientState,
                     frozen, batch: ppo.PPOBatch,
-                    aux: Optional[dict] = None, gram_fn=None):
-    """One local FIRM update.  Returns (new_state, metrics)."""
+                    aux: Optional[dict] = None, gram_fn=None,
+                    preference=None):
+    """One local FIRM update.  Returns (new_state, metrics).
+
+    ``preference`` optionally overrides ``fc.preference`` with a traced
+    (M,) array — the vmap-safe signature the vectorized engine uses to run
+    heterogeneous per-client preferences through a single trace.
+    """
     grads, losses, (metrics, feats, r_tok, rets, mask) = \
         ppo.per_objective_grads(cfg, fc, state.trainable, frozen,
                                 state.critic, batch, state.kl_coef, aux)
     eta = firm.eta_schedule(state.step + 1) if fc.lambda_smoothing else None
     res = firm.resolve(grads, fc, prev_lam=state.lam, eta=eta,
-                       gram_fn=gram_fn)
+                       gram_fn=gram_fn, preference=preference)
     new_trainable, new_opt, gnorm = optim.adam_update(
         res.direction, state.opt, state.trainable, lr=fc.actor_lr,
         max_grad_norm=1.0)
@@ -97,3 +103,20 @@ def fedcmoo_local_apply(fc: FIRMConfig, state: ClientState, grads,
     new_state = ClientState(new_trainable, new_critic, new_opt, lam,
                             new_kl, state.step + 1)
     return new_state, dict(metrics, lam=lam, grad_norm=gnorm, td_err=td_err)
+
+
+def linear_local_step(cfg: ModelConfig, fc: FIRMConfig, state: ClientState,
+                      frozen, batch: ppo.PPOBatch, weights: jnp.ndarray,
+                      aux: Optional[dict] = None):
+    """Fixed-weight linear scalarization step (the implicit RQ1 baseline).
+
+    Fuses ``fedcmoo_local_grads`` + ``fedcmoo_local_apply`` with a constant
+    λ = ``weights`` so the vectorized engine can scan it as one jittable
+    unit; the math is exactly the loop path's two-phase call sequence.
+    """
+    grads, losses, extras = fedcmoo_local_grads(cfg, fc, state, frozen,
+                                                batch, aux)
+    new_state, metrics = fedcmoo_local_apply(fc, state, grads, weights,
+                                             extras)
+    return new_state, dict(metrics, losses=losses,
+                           rewards=batch.rewards.mean(0))

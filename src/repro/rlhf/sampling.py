@@ -49,3 +49,21 @@ def generate(cfg: ModelConfig, params, prompt: jnp.ndarray, key,
     mask = jnp.concatenate([jnp.zeros((b, p), jnp.float32),
                             jnp.ones((b, max_new), jnp.float32)], axis=1)
     return tokens, logprobs, mask
+
+
+def generate_stacked(cfg: ModelConfig, params, prompts: jnp.ndarray, keys,
+                     max_new: int = 32, temperature: float = 1.0,
+                     aux: Optional[dict] = None):
+    """Multi-client batched generation: one dispatch for a (C, B, P) block.
+
+    ``params`` is a stacked pytree with a leading client axis, ``keys`` is
+    (C, 2) — one PRNG key per client so every client's rollout matches the
+    per-client ``generate`` call with the same key.  Returns stacked
+    (C, B, S) tokens / logprobs / mask.
+    """
+
+    def one(p, prompt, key):
+        return generate(cfg, p, prompt, key, max_new=max_new,
+                        temperature=temperature, aux=aux)
+
+    return jax.vmap(one)(params, prompts, keys)

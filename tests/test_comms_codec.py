@@ -190,6 +190,31 @@ def test_lowrank_codec_recovers_lowrank_signal():
     assert rel < 1e-4
 
 
+@pytest.mark.parametrize("spec", ["identity", "int8", "topk:0.1",
+                                  "int8+ef", "topk:0.1+ef"])
+def test_roundtrip_flat_matches_tree_roundtrip(spec):
+    """The pre-flattened Payload boundary (used by the vectorized engine's
+    batched delta uplink) is payload- and state-equivalent to the
+    tree-based roundtrip."""
+    tree = _tree()
+    flat, tspec = tree_to_flat(tree)
+    key = jax.random.fold_in(KEY, 7)
+    c1, c2 = make_codec(spec), make_codec(spec)
+    p1, s1, dec_tree = c1.roundtrip(tree, None, key=key)
+    p2, s2, dec_flat = c2.roundtrip_flat(flat, tspec, None, key=key)
+    assert p1.nbytes == p2.nbytes
+    for k in p1.arrays:
+        np.testing.assert_array_equal(np.asarray(p1.arrays[k]),
+                                      np.asarray(p2.arrays[k]))
+    np.testing.assert_allclose(np.asarray(tree_to_flat(dec_tree)[0]),
+                               np.asarray(dec_flat), rtol=1e-6)
+    if s1 is None:
+        assert s2 is None
+    else:                                 # error-feedback residuals agree
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-6)
+
+
 # --------------------------------------------------------- error feedback
 def test_error_feedback_residual_reinjected():
     """EF conservation: at every step, sum(decoded so far) + residual

@@ -1,0 +1,235 @@
+"""Vectorized round engine: loop-vs-vmapped equivalence, stacked tree
+ops, batched prompt sampling, banded rewards, and buffer donation."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig
+from repro.core import drift, fedavg
+from repro.data import partition
+from repro.fed.engine import EngineConfig, FederatedTrainer
+from repro.rlhf import rewards as rewards_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    return get_config("llama-3.2-1b").reduced(n_layers=2, d_model=64,
+                                              vocab=256)
+
+
+def _trainer(algorithm, vectorized, *, n_clients=2, local_steps=1,
+             m=2, seed=0, **kw):
+    fc_kw = {k: kw.pop(k) for k in ("client_preferences", "participation")
+             if k in kw}
+    fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
+                    local_steps=local_steps, batch_size=2, beta=0.05,
+                    **fc_kw)
+    ec = EngineConfig(algorithm=algorithm, max_new=6, prompt_len=4,
+                      seed=seed, vectorized_clients=vectorized, **kw)
+    return FederatedTrainer(_cfg(), fc, ec)
+
+
+def _assert_summaries_close(s0, s1, atol=1e-3):
+    np.testing.assert_allclose(s0["rewards"], s1["rewards"], atol=atol)
+    np.testing.assert_allclose(s0["per_client_lam"], s1["per_client_lam"],
+                               atol=atol)
+    np.testing.assert_allclose(s0["param_drift"], s1["param_drift"],
+                               atol=atol)
+    np.testing.assert_allclose(s0["kl"], s1["kl"], atol=atol)
+    assert s0["comm_bytes"] == s1["comm_bytes"]
+    assert s0["participants"] == s1["participants"]
+
+
+# -------------------------------------------------- loop vs vectorized
+@pytest.mark.parametrize("alg", ["firm", "fedcmoo", "linear"])
+def test_loop_vs_vectorized_one_round(alg):
+    """Same seed, vectorized_clients on/off: per-round rewards, λ, drift
+    and comm bytes agree (firm/fedcmoo/linear)."""
+    s0 = _trainer(alg, False, local_steps=2).run(1)[-1]
+    s1 = _trainer(alg, True, local_steps=2).run(1)[-1]
+    _assert_summaries_close(s0, s1)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("alg", ["firm", "fedcmoo", "linear"])
+def test_loop_vs_vectorized_multi_round(alg):
+    # λ accumulates float noise through the trace-normalized Gram + QP
+    # solve across rounds (rewards stay bit-identical); tolerance is loose
+    h0 = _trainer(alg, False, local_steps=2, n_clients=2).run(3)
+    h1 = _trainer(alg, True, local_steps=2, n_clients=2).run(3)
+    for s0, s1 in zip(h0, h1):
+        _assert_summaries_close(s0, s1, atol=2e-2)
+
+
+def test_loop_vs_vectorized_heterogeneous_rms():
+    """Per-client reward bands ride the vmapped scorer as traced params."""
+    s0 = _trainer("firm", False, n_clients=2,
+                  heterogeneous_rms=True).run(1)[-1]
+    s1 = _trainer("firm", True, n_clients=2,
+                  heterogeneous_rms=True).run(1)[-1]
+    _assert_summaries_close(s0, s1)
+
+
+@pytest.mark.slow
+def test_loop_vs_vectorized_client_preferences():
+    """Per-client preference vectors become a traced (C, M) array in the
+    vectorized path instead of per-client static retraces."""
+    prefs = ((4.0, 0.25), (0.25, 4.0))
+    s0 = _trainer("firm", False, client_preferences=prefs).run(2)[-1]
+    s1 = _trainer("firm", True, client_preferences=prefs).run(2)[-1]
+    _assert_summaries_close(s0, s1, atol=5e-3)
+    # the preference steering effect survives vectorization
+    assert s1["per_client_lam"][0, 0] > s1["per_client_lam"][1, 0]
+
+
+def test_loop_vs_vectorized_partial_participation():
+    s0 = _trainer("firm", False, n_clients=4, participation=0.5).run(1)[-1]
+    s1 = _trainer("firm", True, n_clients=4, participation=0.5).run(1)[-1]
+    assert len(s1["participants"]) == 2
+    _assert_summaries_close(s0, s1)
+
+
+def test_vectorized_flag_off_uses_loop():
+    tr = _trainer("firm", False)
+    assert not tr._use_vectorized()
+    assert _trainer("firm", True)._use_vectorized()
+
+
+def test_vectorized_dispatch_count_flat_in_clients():
+    """The vectorized local phase is ONE jitted dispatch regardless of C;
+    the loop path pays C × K × (generate + ref + step)."""
+    s_vec = _trainer("firm", True, n_clients=4, local_steps=2).run(1)[-1]
+    s_loop = _trainer("firm", False, n_clients=4, local_steps=2).run(1)[-1]
+    assert s_vec["dispatches"] < s_loop["dispatches"]
+    # loop: 3 jitted calls per client-step + round-level tree ops
+    assert s_loop["dispatches"] >= 4 * 2 * 3
+    # vectorized: stack, round scan, unstack + round-level tree ops
+    assert s_vec["dispatches"] <= 8
+
+
+# -------------------------------------------------- component equivalence
+def test_sample_prompt_block_matches_datasets():
+    """The batched (C, B, P) sampler reproduces each client's
+    PromptDataset.next_batch stream bit-for-bit, including desynced
+    per-client counts."""
+    vocab, plen, b = 256, 4, 3
+    datasets = partition.make_client_datasets(3, vocab, plen, seed=5)
+    datasets[1].next_batch(b)                # desync client 1's stream
+    seeds = [ds.seed for ds in datasets]
+    counts = [ds._count for ds in datasets]
+    probs = jnp.stack([ds.topic_probs for ds in datasets])
+    block = partition.sample_prompt_block(seeds, counts, probs, b, plen,
+                                          vocab)
+    assert block.shape == (3, b, plen)
+    for c, ds in enumerate(datasets):
+        np.testing.assert_array_equal(np.asarray(block[c]),
+                                      np.asarray(ds.next_batch(b)))
+
+
+def test_score_batch_banded_matches_closures():
+    for variant in ("default", "alt"):
+        fns = rewards_lib.make_reward_fns(256, 3, variant=variant,
+                                          length_tolerance=5)
+        helpful, harmful = rewards_lib.variant_bands(256, variant)
+        tokens = jax.random.randint(KEY, (4, 10), 0, 256)
+        mask = (jax.random.uniform(jax.random.fold_in(KEY, 1),
+                                   (4, 10)) > 0.3).astype(jnp.float32)
+        want = rewards_lib.score_batch(fns, tokens, mask)
+        got = rewards_lib.score_batch_banded(helpful, harmful, tokens,
+                                             mask, 3, 5)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_score_batch_banded_vmaps_over_clients():
+    bands = [rewards_lib.variant_bands(256, v)
+             for v in ("default", "alt")]
+    bh = jnp.stack([b[0] for b in bands])
+    bx = jnp.stack([b[1] for b in bands])
+    tokens = jax.random.randint(KEY, (2, 4, 10), 0, 256)
+    mask = jnp.ones((2, 4, 10), jnp.float32)
+    out = jax.vmap(
+        lambda h, x, t, mk: rewards_lib.score_batch_banded(h, x, t, mk,
+                                                           2, 5))(
+        bh, bx, tokens, mask)
+    assert out.shape == (2, 4, 2)
+    for c in range(2):
+        fns = rewards_lib.make_reward_fns(
+            256, 2, variant=("default", "alt")[c], length_tolerance=5)
+        np.testing.assert_allclose(
+            np.asarray(out[c]),
+            np.asarray(rewards_lib.score_batch(fns, tokens[c], mask[c])))
+
+
+def test_stack_unstack_roundtrip():
+    trees = [{"a": jnp.full((3,), float(i)),
+              "b": {"c": jnp.ones((2, 2)) * i}} for i in range(4)]
+    stacked = fedavg.stack_trees(trees)
+    assert stacked["a"].shape == (4, 3)
+    back = fedavg.unstack_tree(stacked, 4)
+    for t0, t1 in zip(trees, back):
+        for a, b in zip(jax.tree_util.tree_leaves(t0),
+                        jax.tree_util.tree_leaves(t1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(
+        np.asarray(fedavg.fedavg_stacked(stacked)["a"]),
+        np.asarray(fedavg.fedavg(trees)["a"]), rtol=1e-6)
+
+
+def test_param_drift_stacked_matches_loop():
+    keys = jax.random.split(KEY, 3)
+    trees = [{"w": jax.random.normal(k, (5, 4)),
+              "v": jax.random.normal(jax.random.fold_in(k, 1), (7,))}
+             for k in keys]
+    want = float(drift.param_drift(trees))
+    got = float(drift.param_drift_stacked(fedavg.stack_trees(trees)))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    single = fedavg.stack_trees(trees[:1])
+    assert float(drift.param_drift_stacked(single)) == 0.0
+
+
+def test_generate_stacked_matches_per_client():
+    """The standalone batched-generation API reproduces per-client
+    generate calls with the same keys over a (C, B, P) block."""
+    from repro.fed.engine import _stack_trees_jit
+    from repro.models import transformer
+    from repro.rlhf.sampling import generate, generate_stacked
+    cfg = _cfg()
+    keys = jax.random.split(KEY, 2)
+    params = [transformer.init_params(cfg, k) for k in keys]
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 3, 4),
+                                 0, cfg.vocab)
+    gkeys = jax.random.split(jax.random.fold_in(KEY, 3), 2)
+    toks, lps, mask = generate_stacked(cfg, _stack_trees_jit(*params),
+                                       prompts, gkeys, max_new=5)
+    assert toks.shape == (2, 3, 9)
+    for c in range(2):
+        t, lp, mk = generate(cfg, params[c], prompts[c], gkeys[c],
+                             max_new=5)
+        np.testing.assert_array_equal(np.asarray(toks[c]), np.asarray(t))
+        np.testing.assert_allclose(np.asarray(lps[c]), np.asarray(lp),
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(mask[c]), np.asarray(mk))
+
+
+# -------------------------------------------------- buffer donation
+def test_no_donation_warnings():
+    """The donated client-state buffers must actually be consumed: any
+    'donated buffers were not usable' warning is an error."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*[Dd]onat.*")
+        _trainer("firm", True, local_steps=2).run(1)
+        _trainer("firm", False, local_steps=2).run(1)
+
+
+def test_loop_path_broadcast_survives_donation():
+    """The jitted local step donates its state arg; the broadcast anchor
+    (and other clients' states) must not be invalidated — two rounds with
+    multiple clients would raise on a deleted buffer otherwise."""
+    tr = _trainer("firm", False, n_clients=3, local_steps=2)
+    h = tr.run(2)
+    assert np.isfinite(h[-1]["rewards"]).all()
