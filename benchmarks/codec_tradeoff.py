@@ -68,6 +68,63 @@ def bench_codec_tradeoff():
     return out
 
 
+def bench_downlink_delta():
+    """Downlink delta broadcast: same wire bytes as the inner codec,
+    far lower distortion from round 2 on.
+
+    The engine sweep measures down_bytes + training health; the
+    distortion comparison quantizes a synthetic slowly-drifting param
+    sequence (round-to-round deltas ~1% of the weights, like FedAvg
+    updates) through int8 vs delta+int8 — the delta codec's per-block
+    scale tracks the small delta instead of the full weight magnitude.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comms import make_codec, tree_to_flat
+
+    cells = {}
+    for down in ("identity", "int8", "delta+int8"):
+        tr = make_trainer("firm", downlink_codec=down)
+        hist = tr.run(2)
+        cells[down] = {"down_bytes": int(hist[-1]["down_bytes"]),
+                       "rewards_finite": bool(np.isfinite(np.asarray(
+                           hist[-1]["rewards"])).all())}
+
+    # distortion on a drifting sequence theta_t = theta_0 + sum of small
+    # steps; report round-2+ mean relative error per codec
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (32768,))
+    spec = tree_to_flat({"w": theta})[1]
+    plain, delta = make_codec("int8"), make_codec("delta+int8")
+    st_p, st_d = None, None
+    errs = {"int8": [], "delta+int8": []}
+    flat = theta
+    for t in range(1, 5):
+        flat = flat + 0.01 * jax.random.normal(jax.random.fold_in(key, t),
+                                               flat.shape)
+        kp = jax.random.fold_in(key, 100 + t)
+        _, st_p, dec_p = plain.roundtrip_flat(flat, spec, st_p, key=kp)
+        _, st_d, dec_d = delta.roundtrip_flat(flat, spec, st_d, key=kp)
+        nrm = float(jnp.linalg.norm(flat))
+        errs["int8"].append(float(jnp.linalg.norm(dec_p - flat)) / nrm)
+        errs["delta+int8"].append(float(jnp.linalg.norm(dec_d - flat))
+                                  / nrm)
+    tail_p = float(np.mean(errs["int8"][1:]))
+    tail_d = float(np.mean(errs["delta+int8"][1:]))
+    return row("codec_downlink_delta", 0.0, {
+        **{f"down_bytes_{k}": v["down_bytes"] for k, v in cells.items()},
+        "rewards_finite": bool(all(v["rewards_finite"]
+                                   for v in cells.values())),
+        "rel_err_int8": round(tail_p, 5),
+        "rel_err_delta_int8": round(tail_d, 5),
+        "distortion_ratio": round(tail_d / max(tail_p, 1e-12), 5),
+        "delta_bytes_match_int8": bool(
+            cells["delta+int8"]["down_bytes"]
+            == cells["int8"]["down_bytes"]),
+    })
+
+
 def bench_codec_acceptance():
     """int8 uplink must be <= ~30% of identity at equal round count."""
     _, _, ident = _sweep_cell("firm", "identity")
@@ -83,7 +140,7 @@ def bench_codec_acceptance():
     })
 
 
-ALL = [bench_codec_tradeoff, bench_codec_acceptance]
+ALL = [bench_codec_tradeoff, bench_downlink_delta, bench_codec_acceptance]
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ Groups:
   kernels_micro  — kernel microbenches + Pallas oracle agreement
   codec_tradeoff — reward-vs-measured-bytes Pareto sweep (comms codecs)
   round_throughput — loop vs vectorized round engine (rounds/sec, dispatches)
+  sched_wallclock — scheduler policy x codec x heterogeneity wall-clock sweep
   roofline       — per-(arch x shape x mesh) roofline from the dry-run
 """
 from __future__ import annotations
@@ -27,10 +28,11 @@ def main() -> None:
 
     from benchmarks import (codec_tradeoff, compression_error, kernels_micro,
                             paper_figures, roofline_report,
-                            round_throughput, theory_checks)
+                            round_throughput, sched_wallclock, theory_checks)
     benches = (paper_figures.ALL + theory_checks.ALL + kernels_micro.ALL +
                compression_error.ALL + codec_tradeoff.ALL +
-               round_throughput.ALL + roofline_report.ALL)
+               round_throughput.ALL + sched_wallclock.ALL +
+               roofline_report.ALL)
     filters = [f for f in args.only.split(",") if f]
 
     print("name,us_per_call,derived")

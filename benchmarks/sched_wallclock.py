@@ -1,0 +1,116 @@
+"""Scheduler wall-clock sweep: policy x codec x heterogeneity preset.
+
+Each cell runs ROUNDS server aggregations under a simulated clock
+(repro.fed.sched) and reports the simulated seconds they took plus the
+final rewards — the reward-vs-wall-clock data behind the scheduler's
+headline claim: under bimodal (edge-vs-datacenter) heterogeneity the
+synchronous barrier pays the slowest straggler every round, while the
+deadline and fedbuff policies aggregate at the speed of the fast
+majority.  Codec choice changes simulated time too (transmission time
+derives from measured Payload bytes), so the sweep crosses policies
+with the uplink codec.
+
+Emits ``BENCH_sched_wallclock.json`` next to the CSV rows (CI uploads
+it on main full runs, alongside the round-throughput baseline).
+
+  PYTHONPATH=src python -m benchmarks.run --only sched_wallclock
+  PYTHONPATH=src python -m benchmarks.sched_wallclock      # standalone
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import make_trainer, row
+from repro.configs.base import SchedConfig
+from repro.fed.sched.policies import ScheduledTrainer
+
+POLICIES = ("sync", "deadline", "fedbuff")
+CODECS = ("identity", "int8+ef")
+PRESETS = ("homogeneous", "bimodal")
+ROUNDS = 3
+N_CLIENTS = 8
+
+
+def _sched_config(policy: str, preset: str) -> SchedConfig:
+    # the deadline quantile sits below bimodal's fast-client fraction
+    # (0.25) so the deadline lands between the fast and slow modes and
+    # actually cuts stragglers off; under homogeneous profiles all
+    # predicted times are equal and nobody is dropped
+    return SchedConfig(
+        policy=policy, profile=preset, profile_seed=0,
+        overselect=1.0, deadline_quantile=0.2,
+        buffer_size=N_CLIENTS // 2, staleness_pow=0.5,
+        staleness_beta_gain=0.5, staleness_bucket_max=2)
+
+
+def _cell(policy: str, codec: str, preset: str) -> dict:
+    tr = make_trainer("firm", beta=0.05, n_clients=N_CLIENTS,
+                      local_steps=1, batch=2, uplink_codec=codec)
+    st = ScheduledTrainer(tr, _sched_config(policy, preset))
+    hist = st.run(ROUNDS)
+    last = hist[-1]
+    sim_time = float(last["sim_time"])
+    rewards = np.asarray(last["rewards"], np.float64)
+    return {
+        "policy": policy, "codec": codec, "preset": preset,
+        "sim_seconds_total": round(sim_time, 4),
+        "sim_seconds_per_round": round(sim_time / ROUNDS, 4),
+        "final_rewards": [round(float(r), 5) for r in rewards],
+        "rewards_finite": bool(np.isfinite(rewards).all()),
+        "dropped_total": int(sum(len(e.get("dropped", []))
+                                 for e in hist)),
+        "max_staleness": int(max((max(e["staleness"]) for e in hist
+                                  if "staleness" in e), default=0)),
+        "up_bytes": int(last["up_bytes"]),
+    }
+
+
+def bench_sched_wallclock():
+    """The policy x codec x heterogeneity table + acceptance flags."""
+    cells = [_cell(p, c, h)
+             for h in PRESETS for c in CODECS for p in POLICIES]
+    by = {(c["policy"], c["codec"], c["preset"]): c for c in cells}
+
+    # acceptance: under bimodal heterogeneity, deadline and fedbuff
+    # complete the same number of aggregations in less simulated time
+    # than the synchronous barrier (reward-vs-wall-clock dominance)
+    acceptance = {}
+    for codec in CODECS:
+        sync_t = by[("sync", codec, "bimodal")]["sim_seconds_total"]
+        dl_t = by[("deadline", codec, "bimodal")]["sim_seconds_total"]
+        fb_t = by[("fedbuff", codec, "bimodal")]["sim_seconds_total"]
+        acceptance[codec] = {
+            "sync_seconds": sync_t,
+            "deadline_seconds": dl_t,
+            "fedbuff_seconds": fb_t,
+            "deadline_speedup": round(sync_t / max(dl_t, 1e-12), 3),
+            "fedbuff_speedup": round(sync_t / max(fb_t, 1e-12), 3),
+            "deadline_beats_sync": bool(dl_t < sync_t),
+            "fedbuff_beats_sync": bool(fb_t < sync_t),
+        }
+
+    with open("BENCH_sched_wallclock.json", "w") as f:
+        json.dump({"rounds": ROUNDS, "n_clients": N_CLIENTS,
+                   "cells": cells, "acceptance": acceptance}, f, indent=2)
+
+    rows = []
+    for c in cells:
+        rows.append(row(
+            "sched_wallclock_"
+            f"{c['preset']}_{c['policy']}_{c['codec']}",
+            c["sim_seconds_per_round"] * 1e6, c))
+    for codec, a in acceptance.items():
+        rows.append(row(f"sched_wallclock_acceptance_{codec}", 0.0, a))
+    return rows
+
+
+ALL = [bench_sched_wallclock]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for line in fn():
+            print(line, flush=True)

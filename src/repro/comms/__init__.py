@@ -12,15 +12,16 @@ Pallas-kernel hot paths (see README.md in this package).
 Analytic per-round models live in repro.core.comms; this package is the
 measured counterpart wired through repro.fed.engine.
 """
-from repro.comms.codec import (Codec, ErrorFeedback, IdentityCodec, Payload,
-                               flat_to_tree, tree_to_flat)
+from repro.comms.codec import (Codec, DeltaCodec, ErrorFeedback,
+                               IdentityCodec, Payload, flat_to_tree,
+                               tree_to_flat)
 from repro.comms.lowrank import LowRankCodec
 from repro.comms.quantize import QuantizeCodec
 from repro.comms.registry import available, make_codec
 from repro.comms.sparsify import TopKCodec
 
 __all__ = [
-    "Codec", "ErrorFeedback", "IdentityCodec", "Payload",
+    "Codec", "DeltaCodec", "ErrorFeedback", "IdentityCodec", "Payload",
     "QuantizeCodec", "TopKCodec", "LowRankCodec",
     "available", "make_codec", "tree_to_flat", "flat_to_tree",
 ]

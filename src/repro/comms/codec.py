@@ -141,6 +141,46 @@ class Codec:
         payload = self._flat_payload(flat, spec, key=key)
         return payload, state, self.decode_flat(payload)[:flat.size]
 
+    # -- stacked-client API ---------------------------------------------
+    def encode_stacked(self, flats: jnp.ndarray, spec: "TreeSpec",
+                       states=None, *, keys=None):
+        """Encode all C client rows of a (C, d) stacked flat array.
+
+        Returns (payloads, new_states) — one Payload per client,
+        byte-identical to C per-client ``encode``/``roundtrip_flat``
+        calls with the same per-client keys.  The base implementation
+        loops; batch-shaped codecs (int8/int4) override it to run ONE
+        kernel dispatch over the stacked axis (the cohort dispatch path).
+        """
+        c = flats.shape[0]
+        states = list(states) if states is not None else [None] * c
+        keys = list(keys) if keys is not None else [None] * c
+        payloads = [self._flat_payload(flats[i], spec, key=keys[i])
+                    for i in range(c)]
+        return payloads, states
+
+    def roundtrip_stacked(self, flats: jnp.ndarray, spec: "TreeSpec",
+                          states=None, *, keys=None):
+        """``roundtrip_flat`` over the stacked client axis.
+
+        Returns (payloads, new_states, decoded) with decoded shaped
+        (C, d).  The base implementation threads per-client state through
+        C ``roundtrip_flat`` calls — exact for any codec, including
+        stateful wrappers; quantize codecs override with a batched
+        single-dispatch path.
+        """
+        c = flats.shape[0]
+        states = list(states) if states is not None else [None] * c
+        keys = list(keys) if keys is not None else [None] * c
+        payloads, new_states, decs = [], [], []
+        for i in range(c):
+            p, s, d = self.roundtrip_flat(flats[i], spec, states[i],
+                                          key=keys[i])
+            payloads.append(p)
+            new_states.append(s)
+            decs.append(d)
+        return payloads, new_states, jnp.stack(decs)
+
 
 class IdentityCodec(Codec):
     """Raw f32 — the baseline every ratio in the benchmarks is against."""
@@ -196,6 +236,26 @@ class ErrorFeedback(Codec):
             flat, spec, state, key)
         return payload, residual, decoded
 
+    def roundtrip_stacked(self, flats, spec, states=None, *, keys=None):
+        """Residual add + batched inner encode over the stacked axis.
+
+        Row i is bit-identical to ``roundtrip_flat(flats[i], ...,
+        states[i], key=keys[i])`` — residual accumulation is elementwise,
+        so stacking commutes with it."""
+        c = flats.shape[0]
+        states = list(states) if states is not None else [None] * c
+        adj = jnp.stack([flats[i] if states[i] is None
+                         else flats[i] + states[i] for i in range(c)])
+        payloads, _, decoded = self.inner.roundtrip_stacked(
+            adj, spec, None, keys=keys)
+        residual = adj - decoded
+        return payloads, [residual[i] for i in range(c)], decoded
+
+    def encode_stacked(self, flats, spec, states=None, *, keys=None):
+        payloads, new_states, _ = self.roundtrip_stacked(
+            flats, spec, states, keys=keys)
+        return payloads, new_states
+
     def decode(self, payload: Payload):
         return self.inner.decode(payload)
 
@@ -204,6 +264,65 @@ class ErrorFeedback(Codec):
 
     def decode_flat(self, payload):
         return self.inner.decode_flat(payload)
+
+    def bits_per_param(self, d: int) -> float:
+        return self.inner.bits_per_param(d)
+
+
+class DeltaCodec(Codec):
+    """Broadcast the delta vs the last round's reconstruction (downlink).
+
+    The server encodes θ_t − ref_{t-1} through the inner codec and both
+    ends advance their reference to the *reconstruction* ref_t = ref_{t-1}
+    + decode(payload), so a lossy inner codec never lets server and
+    clients drift apart.  Round-to-round parameter deltas are orders of
+    magnitude smaller than the weights themselves, so the inner
+    quantizer's per-block scale (absmax/qmax) — and with it the
+    distortion — shrinks accordingly at identical wire bytes.  The first
+    transmission (ref = None) carries the full parameters.
+
+    state is the pair (reference flat vector, inner codec state); decode
+    requires the receiver's reference, so this codec is only usable
+    through the ``roundtrip*`` API (which the engine's downlink uses) —
+    a bare ``decode`` raises.  In the async scheduler every version is
+    encoded exactly once in order, so a client dispatched at version v
+    receives the chain reconstruction ref_v regardless of which version
+    it previously held (reliable cumulative-delta multicast).
+    """
+
+    stateful = True
+
+    def __init__(self, inner: Codec):
+        self.inner = inner
+        self.name = "delta+" + inner.name
+
+    def roundtrip_flat(self, flat, spec, state=None, *, key=None):
+        ref, inner_state = (None, None) if state is None else state
+        base = jnp.zeros_like(flat) if ref is None else ref
+        payload, inner_state, dec_delta = self.inner.roundtrip_flat(
+            flat - base, spec, inner_state, key=key)
+        decoded = base + dec_delta
+        return payload, (decoded, inner_state), decoded
+
+    def roundtrip(self, tree, state=None, *, key=None):
+        flat, spec = tree_to_flat(tree)
+        payload, new_state, decoded = self.roundtrip_flat(flat, spec, state,
+                                                          key=key)
+        return payload, new_state, flat_to_tree(decoded, spec)
+
+    def encode(self, tree, state=None, *, key=None):
+        payload, new_state, _ = self.roundtrip(tree, state, key=key)
+        return payload, new_state
+
+    def decode(self, payload: Payload):
+        raise NotImplementedError(
+            "delta codec reconstruction needs the receiver's reference; "
+            "use roundtrip/roundtrip_flat")
+
+    def decode_flat(self, payload: Payload):
+        raise NotImplementedError(
+            "delta codec reconstruction needs the receiver's reference; "
+            "use roundtrip/roundtrip_flat")
 
     def bits_per_param(self, d: int) -> float:
         return self.inner.bits_per_param(d)

@@ -1,6 +1,6 @@
 """Codec registry + spec-string parser.
 
-Spec grammar:  <name>[:<arg>][+ef]
+Spec grammar:  [delta+]<name>[:<arg>][+ef]
 
     identity            raw f32 (32 bits/param)
     int8                blockwise stochastic int8 (~8.03 bits/param)
@@ -8,14 +8,18 @@ Spec grammar:  <name>[:<arg>][+ef]
     topk:<frac>         magnitude top-k, frac of params kept (64*frac)
     lowrank:<rank>      PowerSGD-style rank-r sketch (~64r/sqrt(d))
     ...+ef              wrap in client-local error feedback
+    delta+...           transmit the delta vs the last round's
+                        reconstruction (downlink broadcast codec); same
+                        bits/param as the inner codec, far lower
+                        distortion from round 2 on
 
-Examples: "int8", "int4+ef", "topk:0.05+ef", "lowrank:8".
+Examples: "int8", "int4+ef", "topk:0.05+ef", "lowrank:8", "delta+int8".
 """
 from __future__ import annotations
 
 from typing import Callable, Dict
 
-from repro.comms.codec import Codec, ErrorFeedback, IdentityCodec
+from repro.comms.codec import Codec, DeltaCodec, ErrorFeedback, IdentityCodec
 from repro.comms.lowrank import LowRankCodec
 from repro.comms.quantize import QuantizeCodec
 from repro.comms.sparsify import TopKCodec
@@ -62,6 +66,11 @@ def available() -> tuple:
 def make_codec(spec: str) -> Codec:
     """'topk:0.05+ef' -> ErrorFeedback(TopKCodec(0.05))."""
     spec = (spec or "identity").strip()
+    # delta composes OUTSIDE the rest of the spec ("delta+int8+ef" ->
+    # DeltaCodec(ErrorFeedback(int8))): the inner codec sees the delta
+    # stream, reference tracking stays in the wrapper
+    if spec == "delta" or spec.startswith("delta+"):
+        return DeltaCodec(make_codec(spec[len("delta+"):] or "identity"))
     wrap_ef = spec.endswith("+ef")
     if wrap_ef:
         spec = spec[:-3]

@@ -203,6 +203,9 @@ class FIRMConfig:
     participation: float = 1.0       # fraction of clients sampled per round
     client_preferences: Optional[Tuple[Tuple[float, ...], ...]] = None
     # per-client p vectors (pluralistic alignment); overrides `preference`
+    client_local_steps: Optional[Tuple[int, ...]] = None
+    # per-client K (FedMOA-style heterogeneous compute rates); clients with
+    # equal K form one vmapped cohort in the group-by-config dispatch
     lambda_smoothing: bool = True    # eta_t smoothing (Alg. 2, Eq. 12)
     eta0: float = 1.0
     actor_lr: float = 6e-5
@@ -215,6 +218,35 @@ class FIRMConfig:
     trace_normalize: bool = True     # App. A Gram normalisation
     solver: str = "pgd"              # pgd | closed_form_m2 | frank_wolfe
     solver_iters: int = 100
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedConfig:
+    """Scheduler-subsystem knobs (repro.fed.sched).
+
+    ``policy`` selects the aggregation discipline; ``profile`` names a
+    heterogeneity preset from repro.fed.sched.profiles.  The deadline
+    policy over-selects by ``overselect`` and drops participants whose
+    *predicted* round time (analytic codec bytes + profile rates) exceeds
+    the deadline — absolute seconds, or the ``deadline_quantile`` of the
+    selected cohort's predicted times when set.  The fedbuff policy
+    aggregates every ``buffer_size`` arrivals with staleness weights
+    w ∝ (1+s)^-staleness_pow and scales FIRM's β by the client's observed
+    staleness bucket (core.firm.staleness_beta).
+    """
+    policy: str = "sync"             # sync | deadline | fedbuff
+    profile: str = "homogeneous"     # profiles preset name
+    profile_seed: int = 0
+    # deadline policy
+    overselect: float = 1.0          # select overselect * (p * C) clients
+    deadline_s: float = float("inf")
+    deadline_quantile: Optional[float] = None
+    # fedbuff policy
+    buffer_size: int = 0             # aggregate every B arrivals; 0 -> C
+    staleness_pow: float = 0.5
+    staleness_beta_gain: float = 0.0
+    staleness_beta_cap: float = 8.0
+    staleness_bucket_max: int = 3    # β buckets bound retraces/compiles
 
 
 # Deployment-profile codec presets (repro.comms registry specs) — the

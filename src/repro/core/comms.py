@@ -92,6 +92,30 @@ def fedcmoo_round_bytes_codec(d_trainable: int, n_clients: int,
     return {"up": up, "down": down, "total": up + down}
 
 
+# ------------------------------------------------------- time-from-bytes
+# Simulated-clock models used by the scheduler subsystem (repro.fed.sched):
+# transmission time derives from *measured* Payload bytes, so codec choice
+# changes simulated wall-clock, not just the byte ledger.
+
+def transmission_seconds(nbytes: float, bytes_per_sec: float) -> float:
+    """Wire time of a payload over a link with the given bandwidth."""
+    return float(nbytes) / max(float(bytes_per_sec), 1e-9)
+
+
+def compute_seconds(tokens: float, tokens_per_sec: float) -> float:
+    """Local-phase compute time at a client's processing rate."""
+    return float(tokens) / max(float(tokens_per_sec), 1e-9)
+
+
+def local_phase_tokens(local_steps: int, batch_size: int,
+                       seq_len: int) -> int:
+    """Token work of one client's local phase: K steps x B sequences of
+    (prompt + generated) tokens.  Generation and the PPO update both
+    scale linearly in this count at fixed model size, so one rate
+    (tokens/s) captures a client's compute speed."""
+    return int(local_steps) * int(batch_size) * int(seq_len)
+
+
 @dataclasses.dataclass
 class CommsLedger:
     up_bytes: int = 0

@@ -44,6 +44,29 @@ def fedavg_stacked(stacked):
     return jax.tree_util.tree_map(lambda x: x.mean(axis=0), stacked)
 
 
+def staleness_weights(staleness, pow: float = 0.5) -> jnp.ndarray:
+    """FedBuff-style staleness discounting: w_i ∝ (1 + s_i)^-pow.
+
+    ``staleness`` is the per-arrival (C,) count of server versions that
+    advanced while each client trained.  Weights always sum to 1, and at
+    zero staleness they reduce to the uniform 1/C — so staleness-weighted
+    aggregation of a synchronous barrier is *exactly* FedAvg.
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    w = (1.0 + s) ** (-jnp.asarray(pow, jnp.float32))
+    return w / w.sum()
+
+
+def fedavg_flat_weighted(flats: jnp.ndarray, weights: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """(C, d) stacked flat deltas x (C,) weights -> (d,) aggregate.
+
+    The flat-vector twin of ``fedavg_weighted`` used at the engine's
+    codec Payload boundary (one matvec, no per-client tree ops).
+    """
+    return jnp.asarray(weights, jnp.float32) @ flats
+
+
 def fedavg_collective(tree, axis_name: str = "pod"):
     """Cross-pod FedAvg as a single all-reduce (the O(Cd) collective).
 

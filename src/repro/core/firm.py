@@ -61,3 +61,19 @@ def resolve(grads: Sequence, fc: FIRMConfig,
 def eta_schedule(t: jnp.ndarray) -> jnp.ndarray:
     """η_t = 1/t (App. F.3.3), with η_1 = 1."""
     return 1.0 / jnp.maximum(t.astype(jnp.float32), 1.0)
+
+
+def staleness_beta(beta: float, staleness, gain: float = 0.5,
+                   cap: float = 8.0) -> float:
+    """β_eff = β · min(1 + gain·s, cap) — staleness-aware regularization.
+
+    Under buffered-async aggregation a client training from a version s
+    rounds behind the server drifts further from consensus; FIRM's
+    in-client regularizer β is exactly the drift-mitigation knob (Thm 4.5),
+    so the async scheduler scales it with the client's observed staleness
+    instead of bolting on a separate correction term.  ``gain`` = 0
+    disables the coupling (β_eff = β); ``cap`` bounds the multiplier so a
+    deeply stale client still makes progress on its own objectives.
+    """
+    mult = min(1.0 + gain * float(staleness), cap)
+    return float(beta) * mult

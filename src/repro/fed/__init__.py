@@ -1,3 +1,4 @@
 from repro.fed.engine import EngineConfig, FederatedTrainer  # noqa
+from repro.fed.sched.policies import ScheduledTrainer  # noqa
 
-__all__ = ["FederatedTrainer", "EngineConfig"]
+__all__ = ["FederatedTrainer", "EngineConfig", "ScheduledTrainer"]

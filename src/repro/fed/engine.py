@@ -34,19 +34,34 @@ Two interchangeable local-phase paths:
   for equivalence testing and as the fallback when per-client configs
   diverge statically.
 
-vmap groups clients by IDENTICAL static config: every participant must
-share one ``FIRMConfig`` once ``preference`` is lifted to a traced
-(C, M) array (``client_preferences`` all set, or none) — any other
-per-client static divergence (e.g. mixed solvers) falls back to the
-loop path.  The comms codec stays per-client at the Payload boundary in
-both paths; vmapping the codec encode itself is a recorded follow-up.
+vmap groups clients by IDENTICAL static config, and since PR 3 that
+grouping is a *cohort plan* (repro.fed.sched.cohort) instead of an
+all-or-nothing fallback: participants partition into groups with equal
+static ``FIRMConfig`` (preference lifted to a traced (C, M) array when
+``client_preferences`` is set), and each cohort runs as one vmapped
+program — e.g. heterogeneous per-client ``client_local_steps``
+(FedMOA-style rates) costs one dispatch per distinct K.  Generation
+keys are drawn in the canonical loop order (step-major over all
+participants) and sliced per cohort, so multi-cohort rounds stay
+equivalent to the per-client loop.  fedcmoo still requires a single
+cohort (its λ exchange is global per local step) and falls back to the
+loop otherwise.  The uplink codec runs at a *stacked* Payload boundary
+(``Codec.roundtrip_stacked``): quantize codecs encode all C client
+deltas in one batched kernel dispatch, byte-identical to per-client
+encodes.
+
+Participation sampling draws from a NAMED PRNG stream keyed on
+(seed, round index), independent of how many keys generation / codecs
+consumed — so the scheduler subsystem's deadline over-selection and
+dropout (repro.fed.sched) reproduce the same client draws across
+policies.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +71,7 @@ from repro.comms import codec as codec_lib
 from repro.configs.base import FIRMConfig, ModelConfig
 from repro.core import comms, drift, fedavg, fedcmoo
 from repro.data.partition import make_client_datasets, sample_prompt_block
+from repro.fed.sched.cohort import build_cohorts
 from repro.models import transformer
 from repro.models.common import merge_trainable, split_trainable, tree_size
 from repro.rlhf import local as local_lib
@@ -200,20 +216,25 @@ _delta_flat_jit = jax.jit(lambda stacked, anchor: jnp.concatenate(
 
 @functools.lru_cache(maxsize=None)
 def _jit_flat_aggregate(spec):
-    """FedAvg of the decoded flat deltas over the stacked client axis +
-    apply to the broadcast anchor, in one dispatch (one unflatten total
-    instead of one per client)."""
+    """Staleness-weighted FedAvg of the decoded flat deltas over the
+    stacked client axis + apply to the anchor, in one dispatch (one
+    unflatten total instead of one per client).  Zero staleness gives
+    exactly uniform 1/C weights, so the synchronous round and the async
+    scheduler's zero-staleness barrier produce bit-identical aggregates.
+    """
 
-    def fn(anchor, *flats):
-        mean = fedavg.fedavg_stacked(jnp.stack(flats))
+    def fn(anchor, flats, staleness, pow):
+        w = fedavg.staleness_weights(staleness, pow)
+        agg = fedavg.fedavg_flat_weighted(flats, w)
         return jax.tree_util.tree_map(lambda b, d: b + d, anchor,
-                                      codec_lib.flat_to_tree(mean, spec))
+                                      codec_lib.flat_to_tree(agg, spec))
 
     return jax.jit(fn)
 
 
 @jax.jit
-def _summary_device(lams, rewards_mean, kl_mean, stacked_trainable):
+def _summary_device(lams, rewards_mean, kl_mean, stacked_trainable,
+                    rewards_pc):
     """All round-summary statistics computed device-side; the engine does
     ONE host transfer per round (jax.device_get of this dict)."""
     return {
@@ -223,7 +244,17 @@ def _summary_device(lams, rewards_mean, kl_mean, stacked_trainable):
         "param_drift": drift.param_drift_stacked(stacked_trainable),
         "kl": kl_mean,
         "per_client_lam": lams,
+        "rewards_per_client": rewards_pc,
     }
+
+
+class LocalPhaseResult(NamedTuple):
+    """What every local-phase path (loop / vec / cohorts) hands back."""
+    lams: jnp.ndarray                # (P, M) final per-client λ
+    rewards_mean: jnp.ndarray        # (M,) mean over all client-steps
+    kl_mean: jnp.ndarray             # scalar
+    stacked_trainable: object        # pytree with leading (P,) client axis
+    rewards_pc: jnp.ndarray          # (P, M) per-client mean over steps
 
 
 @dataclasses.dataclass
@@ -300,14 +331,28 @@ class FederatedTrainer:
         self.d_trainable = tree_size(trainable)
         self.history: List[dict] = []
         self._rng = jax.random.PRNGKey(ec.seed + 1)
-        # per-client FIRM configs (pluralistic preferences, §6 future work)
+        # named PRNG stream for participation sampling: keyed on
+        # (seed, round index) only, never on how many keys the main
+        # stream consumed — deadline over-selection and dropout in the
+        # scheduler reproduce the same draws across policies
+        self._part_rng_base = jax.random.fold_in(
+            jax.random.PRNGKey(ec.seed + 1), 0x5ced)
+        self._round_idx = 0
+        # per-client FIRM configs (pluralistic preferences §6 future work,
+        # FedMOA-style heterogeneous local-step rates)
+        if fc.client_local_steps is not None and ec.algorithm == "fedcmoo":
+            raise ValueError("fedcmoo needs homogeneous local_steps: its "
+                             "server λ exchange is global per local step")
         self._client_fcs = []
         base_fc = self._fc_for_algorithm()
         for c in range(fc.n_clients):
             cfc = base_fc
             if fc.client_preferences is not None:
                 cfc = dataclasses.replace(
-                    base_fc, preference=fc.client_preferences[c])
+                    cfc, preference=fc.client_preferences[c])
+            if fc.client_local_steps is not None:
+                cfc = dataclasses.replace(
+                    cfc, local_steps=int(fc.client_local_steps[c]))
             self._client_fcs.append(cfc)
         self._jit_steps = [_jit_local_step(cfg, cfc)
                            for cfc in self._client_fcs]
@@ -343,13 +388,25 @@ class FederatedTrainer:
         return ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
 
     # ------------------------------------------------------------------
-    def _sample_participants(self) -> List[int]:
+    def _participation_key(self, round_idx: Optional[int] = None):
+        r = self._round_idx if round_idx is None else round_idx
+        return jax.random.fold_in(self._part_rng_base, r)
+
+    def _sample_participants(self, n: Optional[int] = None,
+                             round_idx: Optional[int] = None) -> List[int]:
+        """Draw this round's participants from the named stream.
+
+        ``n`` overrides the participation-derived count (the deadline
+        policy over-selects); same (seed, round) -> same draw no matter
+        what else consumed PRNG keys in between.
+        """
         fc = self.fc
-        n = max(1, int(round(fc.participation * fc.n_clients)))
+        if n is None:
+            n = max(1, int(round(fc.participation * fc.n_clients)))
         if n >= fc.n_clients:
             return list(range(fc.n_clients))
-        idx = jax.random.choice(self._next_key(), fc.n_clients, (n,),
-                                replace=False)
+        idx = jax.random.choice(self._participation_key(round_idx),
+                                fc.n_clients, (n,), replace=False)
         return sorted(int(i) for i in idx)
 
     def _grad_codec(self):
@@ -359,31 +416,55 @@ class FederatedTrainer:
         ul = self.uplink_codec
         return ul.inner if isinstance(ul, ErrorFeedback) else ul
 
-    def _use_vectorized(self) -> bool:
-        """Whether the stacked/vmapped local phase can serve this round.
+    def _local_phase_mode(self, participants: List[int]):
+        """Pick the round's local-phase path: ("vec"|"cohort"|"loop", plan).
 
-        vmap groups clients by identical static config: all per-client
-        FIRMConfigs must agree once ``preference`` is lifted to a traced
-        array (every client has a preference vector, or none does).
+        vmap groups clients by identical static config; the cohort plan
+        (repro.fed.sched.cohort) partitions participants accordingly.
+        One cohort -> the PR 2 single-dispatch path; several -> one
+        vmapped dispatch per cohort.  fedcmoo's per-step global λ
+        exchange needs every participant in lock-step, so it only runs
+        vectorized as a single cohort.
         """
         if not self.ec.vectorized_clients:
-            return False
+            return "loop", None
         if self.ec.algorithm not in ("firm", "firm_unreg", "fedcmoo",
                                      "linear"):
-            return False
-        base = dataclasses.replace(self._client_fcs[0], preference=None)
-        if any(dataclasses.replace(f, preference=None) != base
-               for f in self._client_fcs[1:]):
-            return False
-        has = [f.preference is not None for f in self._client_fcs]
+            return "loop", None
+        has = [self._client_fcs[c].preference is not None
+               for c in participants]
         if any(has) and not all(has):
-            return False
-        return True
+            return "loop", None           # mixed static/absent preference
+        plan = build_cohorts([(c, self._client_fcs[c])
+                              for c in participants],
+                             lift_preference=self._stacked_pref is not None)
+        if len(plan) == 1:
+            return "vec", plan
+        if self.ec.algorithm == "fedcmoo":
+            return "loop", None
+        return "cohort", plan
+
+    def _use_vectorized(self) -> bool:
+        """Back-compat probe: does any vmapped path serve a full round?"""
+        mode, _ = self._local_phase_mode(list(range(self.fc.n_clients)))
+        return mode != "loop"
 
     # ------------------------------------------------------------------
-    def run_round(self) -> dict:
+    def _aggregate_flat(self, anchor, flats, staleness,
+                        staleness_pow: float = 0.5):
+        """(anchor tree, (C, d) decoded deltas, (C,) staleness) -> new
+        params; the single server-side aggregation dispatch.  The async
+        scheduler calls this directly with nonzero staleness."""
+        out = _jit_flat_aggregate(self._delta_spec)(
+            anchor, flats, jnp.asarray(staleness, jnp.float32),
+            jnp.float32(staleness_pow))
+        self.jit_dispatches += 1
+        return out
+
+    def run_round(self, participants: Optional[List[int]] = None) -> dict:
         fc = self._fc_for_algorithm()
-        participants = self._sample_participants()
+        if participants is None:
+            participants = self._sample_participants()
         dispatch0 = self.jit_dispatches
         # broadcast θ_t through the downlink codec; every client receives
         # (and trains from) the same decoded broadcast
@@ -394,36 +475,42 @@ class FederatedTrainer:
         for c in participants:
             self.ledger.send_down(dl_payload)
 
-        if self._use_vectorized():
-            lams, rewards_mean, kl_mean, stacked_tr = \
-                self._local_phase_vectorized(fc, participants, broadcast)
+        mode, plan = self._local_phase_mode(participants)
+        if mode == "vec":
+            # the cohort's shared config, not the base fc: a UNIFORM
+            # client_local_steps override still forms one cohort but its
+            # K differs from fc.local_steps
+            res = self._local_phase_vectorized(plan[0].cfc, participants,
+                                               broadcast)
+        elif mode == "cohort":
+            res = self._local_phase_cohorts(plan, participants, broadcast)
         else:
-            lams, rewards_mean, kl_mean, stacked_tr = \
-                self._local_phase_loop(fc, participants, broadcast)
+            res = self._local_phase_loop(fc, participants, broadcast)
 
         # participating clients transmit adapted-param deltas through the
         # uplink codec (residuals stay client-local); the delta against
         # the broadcast anchor flattens in one batched tree op over the
-        # stacked axis, the codec runs per client at the (flat) Payload
-        # boundary, and the server FedAvgs the decoded deltas in one
-        # stacked mean + single unflatten
-        flat_deltas = _delta_flat_jit(stacked_tr, broadcast)
+        # stacked axis, the codec encodes all clients at the stacked
+        # (flat) Payload boundary — one batched kernel dispatch for
+        # quantize codecs — and the server aggregates the decoded (C, d)
+        # matrix in one matvec + single unflatten
+        flat_deltas = _delta_flat_jit(res.stacked_trainable, broadcast)
         self.jit_dispatches += 1
-        decoded = []
+        up_keys = [self._next_key() for _ in participants]
+        payloads, new_states, decoded = self.uplink_codec.roundtrip_stacked(
+            flat_deltas, self._delta_spec,
+            [self._uplink_state[c] for c in participants], keys=up_keys)
         for ci, c in enumerate(participants):
-            payload, self._uplink_state[c], dec = \
-                self.uplink_codec.roundtrip_flat(
-                    flat_deltas[ci], self._delta_spec,
-                    self._uplink_state[c], key=self._next_key())
-            self.ledger.send_up(payload)
-            decoded.append(dec)
-        self.global_trainable = _jit_flat_aggregate(self._delta_spec)(
-            broadcast, *decoded)
-        self.jit_dispatches += 1
+            self._uplink_state[c] = new_states[ci]
+            self.ledger.send_up(payloads[ci])
+        self.global_trainable = self._aggregate_flat(
+            broadcast, decoded, jnp.zeros(len(participants), jnp.float32))
         self.ledger.next_round()
+        self._round_idx += 1
 
         # metrics were accumulated on device; ONE host transfer per round
-        stats = _summary_device(lams, rewards_mean, kl_mean, stacked_tr)
+        stats = _summary_device(res.lams, res.rewards_mean, res.kl_mean,
+                                res.stacked_trainable, res.rewards_pc)
         self.jit_dispatches += 1
         host = jax.device_get(stats)
         summary = {
@@ -437,7 +524,14 @@ class FederatedTrainer:
             "down_bytes": self.ledger.down_bytes,
             "participants": participants,
             "per_client_lam": host["per_client_lam"],
+            "rewards_per_client": host["rewards_per_client"],
             "dispatches": self.jit_dispatches - dispatch0,
+            # per-client wire/work facts the scheduler's time model reads
+            "up_nbytes": [int(p.nbytes) for p in payloads],
+            "down_nbytes": comms.measured_bytes(dl_payload),
+            "local_steps": [self._client_fcs[c].local_steps
+                            for c in participants],
+            "cohorts": len(plan) if plan is not None else 0,
         }
         self.history.append(summary)
         return summary
@@ -453,9 +547,16 @@ class FederatedTrainer:
             self.client_states[c] = self.client_states[c]._replace(
                 trainable=jax.tree_util.tree_map(jnp.copy, broadcast))
         round_metrics = []
+        # step-major over participants with per-client K (heterogeneous
+        # client_local_steps finish early and skip): the canonical order
+        # the cohort path's pre-drawn generation keys replicate
+        steps = {c: self._client_fcs[c].local_steps for c in participants}
+        max_k = max(steps.values())
         if self.ec.algorithm in ("firm", "firm_unreg"):
-            for k in range(fc.local_steps):
+            for k in range(max_k):
                 for c in participants:
+                    if k >= steps[c]:
+                        continue
                     batch = self._make_batch(c)
                     self.client_states[c], m = self._jit_steps[c](
                         self.client_states[c], self.frozen, batch)
@@ -498,8 +599,10 @@ class FederatedTrainer:
             w = jnp.asarray(self.ec.linear_weights
                             or [1.0 / fc.n_objectives] * fc.n_objectives,
                             jnp.float32)
-            for k in range(fc.local_steps):
+            for k in range(max_k):
                 for c in participants:
+                    if k >= steps[c]:
+                        continue
                     batch = self._make_batch(c)
                     grads, losses, extras = local_lib.fedcmoo_local_grads(
                         self.cfg, fc, self.client_states[c], self.frozen,
@@ -514,19 +617,33 @@ class FederatedTrainer:
 
         # metrics stay device-resident: stack on device, convert to host
         # once per round in run_round's summary
-        lams = jnp.stack([m["lam"] for m in round_metrics
-                          if "lam" in m][-len(participants):])
+        last_lam = {m["client"]: m["lam"] for m in round_metrics
+                    if "lam" in m}
+        lams = jnp.stack([last_lam[c] for c in participants])
         rewards_mean = jnp.stack([m["rewards"]
                                   for m in round_metrics]).mean(0)
         kl_mean = jnp.stack([m["kl"] for m in round_metrics]).mean()
+        rewards_pc = jnp.stack([
+            jnp.stack([m["rewards"] for m in round_metrics
+                       if m["client"] == c]).mean(0) for c in participants])
         stacked_tr = _stack_trees_jit(
             *[self.client_states[c].trainable for c in participants])
         self.jit_dispatches += 1
-        return lams, rewards_mean, kl_mean, stacked_tr
+        return LocalPhaseResult(lams, rewards_mean, kl_mean, stacked_tr,
+                                rewards_pc)
 
     # ------------------------------------------------- vectorized path
     def _local_phase_vectorized(self, fc: FIRMConfig,
-                                participants: List[int], broadcast):
+                                participants: List[int], broadcast,
+                                gen_keys=None) -> "LocalPhaseResult":
+        """One cohort's local phase as a single scanned/vmapped dispatch.
+
+        Every participant starts from the shared ``broadcast`` (each
+        dispatch in the async scheduler uses one version, too).
+        ``gen_keys`` optionally supplies pre-drawn (K, C, 2) generation
+        keys — the multi-cohort dispatch draws them in the canonical
+        loop order across ALL participants and slices per cohort.
+        """
         p_count = len(participants)
         k_steps = fc.local_steps
         m = fc.n_objectives
@@ -556,15 +673,17 @@ class FederatedTrainer:
         self.jit_dispatches += 1
 
         if self.ec.algorithm == "fedcmoo":
-            lams, rewards_mean, kl_mean, stacked = self._vec_fedcmoo_steps(
-                cfc, participants, stacked, seeds, counts0, probs,
-                band_h, band_x)
+            lams, rewards_mean, kl_mean, rewards_pc, stacked = \
+                self._vec_fedcmoo_steps(cfc, participants, stacked, seeds,
+                                        counts0, probs, band_h, band_x)
         else:
-            # per-client generation keys, drawn in the loop path's order
-            # (step-major, then participant order) for exact key parity
-            gen_keys = jnp.stack(
-                [jnp.stack([self._next_key() for _ in participants])
-                 for _ in range(k_steps)])
+            if gen_keys is None:
+                # per-client generation keys, drawn in the loop path's
+                # order (step-major, then participant order) for exact
+                # key parity
+                gen_keys = jnp.stack(
+                    [jnp.stack([self._next_key() for _ in participants])
+                     for _ in range(k_steps)])
             lin_w = None
             if self.ec.algorithm == "linear":
                 lin_w = jnp.asarray(
@@ -579,12 +698,65 @@ class FederatedTrainer:
             lams = ms["lam"][-1]                              # (C, M)
             rewards_mean = ms["rewards"].reshape(-1, m).mean(0)
             kl_mean = ms["kl"].mean()
+            rewards_pc = ms["rewards"].mean(0)                # (C, M)
 
         new_states = _jit_unstack(p_count)(stacked)
         self.jit_dispatches += 1
         for ci, c in enumerate(participants):
             self.client_states[c] = new_states[ci]
-        return lams, rewards_mean, kl_mean, stacked.trainable
+        return LocalPhaseResult(lams, rewards_mean, kl_mean,
+                                stacked.trainable, rewards_pc)
+
+    # ------------------------------------------------- cohort dispatch
+    def _local_phase_cohorts(self, plan, participants: List[int],
+                             broadcast) -> "LocalPhaseResult":
+        """Group-by-config dispatch: one vmapped program per cohort.
+
+        Generation keys are drawn ONCE in the canonical loop order —
+        step-major over all participants, skipping clients whose K is
+        exhausted — then sliced per cohort, so a multi-cohort round
+        consumes the PRNG stream exactly like the per-client loop and
+        stays equivalent to it.  Per-cohort results reassemble into
+        participant order; scalar metrics merge weighted by each
+        cohort's client-step count (n_g * K_g), matching the loop's
+        mean-over-entries semantics.
+        """
+        steps = {c: self._client_fcs[c].local_steps for c in participants}
+        keys = {}
+        for k in range(max(steps.values())):
+            for c in participants:
+                if k < steps[c]:
+                    keys[(c, k)] = self._next_key()
+
+        pos = {c: i for i, c in enumerate(participants)}
+        lam_rows = [None] * len(participants)
+        rpc_rows = [None] * len(participants)
+        stacked_parts, order = [], []
+        rew_acc, kl_acc, w_tot = 0.0, 0.0, 0
+        for co in plan:
+            members = list(co.members)
+            gk = jnp.stack(
+                [jnp.stack([keys[(c, k)] for c in members])
+                 for k in range(co.cfc.local_steps)])
+            res = self._local_phase_vectorized(co.cfc, members, broadcast,
+                                               gen_keys=gk)
+            for i, c in enumerate(members):
+                lam_rows[pos[c]] = res.lams[i]
+                rpc_rows[pos[c]] = res.rewards_pc[i]
+            w = len(members) * co.cfc.local_steps
+            rew_acc = rew_acc + w * res.rewards_mean
+            kl_acc = kl_acc + w * res.kl_mean
+            w_tot += w
+            stacked_parts.append(res.stacked_trainable)
+            order.extend(members)
+
+        inv = jnp.asarray([order.index(c) for c in participants], jnp.int32)
+        stacked_tr = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0)[inv], *stacked_parts)
+        self.jit_dispatches += 1
+        return LocalPhaseResult(jnp.stack(lam_rows), rew_acc / w_tot,
+                                kl_acc / w_tot, stacked_tr,
+                                jnp.stack(rpc_rows))
 
     def _vec_fedcmoo_steps(self, cfc: FIRMConfig, participants: List[int],
                            stacked, seeds, counts0, probs, band_h, band_x):
@@ -632,7 +804,8 @@ class FederatedTrainer:
             kl_hist.append(metrics["kl"])
         rewards_mean = jnp.stack(rew_hist).reshape(-1, m).mean(0)
         kl_mean = jnp.stack(kl_hist).mean()
-        return lam_last, rewards_mean, kl_mean, stacked
+        rewards_pc = jnp.stack(rew_hist).mean(0)              # (C, M)
+        return lam_last, rewards_mean, kl_mean, rewards_pc, stacked
 
     def run(self, rounds: Optional[int] = None) -> List[dict]:
         for _ in range(rounds or self.fc.rounds):

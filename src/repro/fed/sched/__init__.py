@@ -1,0 +1,32 @@
+"""Federated scheduler subsystem: simulated-time client heterogeneity,
+deadline / buffered-async aggregation, cohort-vectorized dispatch.
+
+    from repro.fed.sched import ScheduledTrainer
+    from repro.configs.base import SchedConfig
+
+See README.md in this package for the time model and policy semantics.
+
+``policies`` is exposed lazily (PEP 562): the engine imports
+``sched.cohort`` at module load, so this package's eager imports must
+not reach back into ``repro.fed.engine``.
+"""
+from repro.fed.sched.clock import EventQueue, SimClock
+from repro.fed.sched.cohort import Cohort, build_cohorts
+from repro.fed.sched.profiles import (ClientProfile, PROFILE_PRESETS,
+                                      sample_profiles)
+
+_LAZY = ("ScheduledTrainer", "SyncPolicy", "DeadlinePolicy",
+         "FedBuffPolicy", "make_policy", "client_round_seconds")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.fed.sched import policies
+        return getattr(policies, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "EventQueue", "SimClock", "Cohort", "build_cohorts",
+    "ClientProfile", "PROFILE_PRESETS", "sample_profiles", *_LAZY,
+]

@@ -1,0 +1,63 @@
+"""Deterministic event-driven simulated clock for the federated scheduler.
+
+The scheduler never sleeps: client work is *computed* eagerly (results
+depend only on the dispatch anchor and RNG stream, never on wall time)
+and only its simulated duration flows through this module.  Events are
+totally ordered by (time, insertion sequence), so simultaneous arrivals
+— e.g. a homogeneous cohort dispatched together — resolve in dispatch
+order and every run with the same seed replays the exact same schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, List, Tuple
+
+
+class SimClock:
+    """Monotone simulated time in seconds."""
+
+    def __init__(self) -> None:
+        self.now: float = 0.0
+
+    def advance_to(self, t: float) -> None:
+        if t < self.now - 1e-12:
+            raise ValueError(f"clock moving backwards: {t} < {self.now}")
+        self.now = max(self.now, float(t))
+
+    def advance_by(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"negative duration {dt}")
+        self.now += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int                         # insertion order: deterministic ties
+    item: Any = dataclasses.field(compare=False, default=None)
+
+
+class EventQueue:
+    """Min-heap of Events with a deterministic (time, seq) total order."""
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._seq = 0
+
+    def push(self, time: float, item: Any) -> None:
+        heapq.heappush(self._heap, (float(time), self._seq, item))
+        self._seq += 1
+
+    def pop(self) -> Event:
+        time, seq, item = heapq.heappop(self._heap)
+        return Event(time, seq, item)
+
+    def peek_time(self) -> float:
+        return self._heap[0][0]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

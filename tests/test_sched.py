@@ -1,0 +1,305 @@
+"""Scheduler subsystem: sync bit-identity, event-clock determinism,
+staleness weights / β scaling, fedbuff & deadline equivalence anchors,
+cohort-vectorized dispatch, named participation PRNG stream."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig, SchedConfig
+from repro.core import fedavg, firm
+from repro.fed.engine import EngineConfig, FederatedTrainer
+from repro.fed.sched import (EventQueue, SimClock, build_cohorts,
+                             sample_profiles)
+from repro.fed.sched.policies import ScheduledTrainer
+
+
+def _cfg():
+    return get_config("llama-3.2-1b").reduced(n_layers=2, d_model=64,
+                                              vocab=256)
+
+
+def _trainer(n_clients=2, local_steps=1, seed=0, **kw):
+    fc_kw = {k: kw.pop(k) for k in ("client_local_steps", "participation",
+                                    "client_preferences") if k in kw}
+    fc = FIRMConfig(n_objectives=2, n_clients=n_clients,
+                    local_steps=local_steps, batch_size=2, beta=0.05,
+                    **fc_kw)
+    ec = EngineConfig(algorithm=kw.pop("algorithm", "firm"), max_new=6,
+                      prompt_len=4, seed=seed, **kw)
+    return FederatedTrainer(_cfg(), fc, ec)
+
+
+def _assert_trees_equal(t0, t1):
+    for a, b in zip(jax.tree_util.tree_leaves(t0),
+                    jax.tree_util.tree_leaves(t1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- clock / queue
+def test_event_queue_deterministic_tie_break():
+    q = EventQueue()
+    q.push(1.0, "b")
+    q.push(0.5, "a")
+    q.push(1.0, "c")                      # same time as "b": seq decides
+    assert [q.pop().item for _ in range(3)] == ["a", "b", "c"]
+
+
+def test_sim_clock_monotone():
+    clk = SimClock()
+    clk.advance_to(2.0)
+    clk.advance_by(1.5)
+    assert clk.now == 3.5
+    with pytest.raises(ValueError):
+        clk.advance_to(1.0)
+    with pytest.raises(ValueError):
+        clk.advance_by(-1.0)
+
+
+# ---------------------------------------------------------- profiles
+def test_profiles_deterministic_and_presets():
+    for preset in ("homogeneous", "uniform", "lognormal", "bimodal"):
+        p0 = sample_profiles(8, preset, seed=3)
+        p1 = sample_profiles(8, preset, seed=3)
+        assert p0 == p1
+        assert all(p.tokens_per_sec > 0 and p.up_bytes_per_sec > 0
+                   for p in p0)
+    assert len(set(sample_profiles(16, "bimodal", seed=0))) == 2
+    with pytest.raises(ValueError):
+        sample_profiles(4, "warp-speed")
+
+
+# ------------------------------------------------ staleness primitives
+def test_staleness_weights_sum_to_one_and_discount():
+    w = np.asarray(fedavg.staleness_weights([0, 1, 5], pow=0.5))
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    assert w[0] > w[1] > w[2]
+    # zero staleness -> exactly uniform (sync FedAvg weights)
+    w0 = np.asarray(fedavg.staleness_weights([0, 0, 0, 0]))
+    np.testing.assert_allclose(w0, 0.25, rtol=1e-6)
+
+
+def test_staleness_beta_hook():
+    assert firm.staleness_beta(0.05, 0, gain=1.0) == pytest.approx(0.05)
+    assert firm.staleness_beta(0.05, 3, gain=1.0) == pytest.approx(0.2)
+    assert firm.staleness_beta(0.05, 100, gain=1.0, cap=4.0) == \
+        pytest.approx(0.2)
+    assert firm.staleness_beta(0.05, 7, gain=0.0) == pytest.approx(0.05)
+
+
+# ------------------------------------------------- named PRNG stream
+def test_participation_stream_independent_of_main_rng():
+    """Participation draws must not move when other components consume
+    PRNG keys — deadline over-selection reproduces sync's draw."""
+    tr = _trainer(n_clients=8, participation=0.5)
+    p0 = tr._sample_participants()
+    for _ in range(7):
+        tr._next_key()                    # perturb the main stream
+    assert tr._sample_participants() == p0
+    # a fresh trainer with the same seed agrees round by round
+    tr2 = _trainer(n_clients=8, participation=0.5)
+    assert tr2._sample_participants(round_idx=0) == p0
+    # over-selection reads the same named stream, deterministically
+    assert tr2._sample_participants(n=6) == tr._sample_participants(n=6)
+
+
+# ------------------------------------------------- sync bit-identity
+def test_sync_policy_bit_identical_to_engine():
+    s_eng = _trainer().run(2)
+    st = ScheduledTrainer(_trainer(),
+                          SchedConfig(policy="sync", profile="bimodal"))
+    s_sched = st.run(2)
+    for a, b in zip(s_eng, s_sched):
+        np.testing.assert_array_equal(np.asarray(a["rewards"]),
+                                      np.asarray(b["rewards"]))
+        np.testing.assert_array_equal(np.asarray(a["per_client_lam"]),
+                                      np.asarray(b["per_client_lam"]))
+        assert a["comm_bytes"] == b["comm_bytes"]
+    # timing annotations exist and advance monotonically
+    assert s_sched[0]["round_duration"] > 0
+    assert s_sched[1]["sim_time"] > s_sched[0]["sim_time"]
+
+
+# ------------------------------------------------- fedbuff anchors
+@pytest.mark.parametrize("downlink", [
+    "identity", pytest.param("int8", marks=pytest.mark.slow)])
+def test_fedbuff_zero_staleness_equals_sync_fedavg(downlink):
+    """Homogeneous profiles + buffer B = C: every arrival has staleness
+    0, weights are uniform, and the whole run — rewards, per-client
+    rewards, comm bytes, aggregated params — is bit-identical to the
+    sync barrier.  Holds under a lossy downlink too: aggregation
+    anchors on the decoded broadcast, exactly like the engine round."""
+    sync = ScheduledTrainer(_trainer(downlink_codec=downlink),
+                            SchedConfig(policy="sync"))
+    hs = sync.run(2)
+    fb = ScheduledTrainer(_trainer(downlink_codec=downlink),
+                          SchedConfig(policy="fedbuff", buffer_size=2))
+    hf = fb.run(2)
+    for a, b in zip(hs, hf):
+        np.testing.assert_array_equal(
+            np.asarray(a["rewards_per_client"]),
+            np.asarray(b["rewards_per_client"]))
+        assert b["staleness"] == [0, 0]
+        np.testing.assert_allclose(b["staleness_weights"], 0.5, rtol=1e-9)
+        assert a["comm_bytes"] == b["comm_bytes"]
+    _assert_trees_equal(sync.trainer.global_trainable,
+                        fb.trainer.global_trainable)
+
+
+def test_fedbuff_event_clock_deterministic():
+    """Same seed, same config -> identical schedules, staleness and
+    rewards (the event queue's (time, seq) order is total)."""
+    def run():
+        st = ScheduledTrainer(
+            _trainer(n_clients=4),
+            SchedConfig(policy="fedbuff", buffer_size=2,
+                        profile="bimodal", staleness_beta_gain=1.0))
+        return st.run(3)
+    h0, h1 = run(), run()
+    for a, b in zip(h0, h1):
+        assert a["sim_time"] == b["sim_time"]
+        assert a["participants"] == b["participants"]
+        assert a["staleness"] == b["staleness"]
+        np.testing.assert_array_equal(np.asarray(a["rewards"]),
+                                      np.asarray(b["rewards"]))
+
+
+@pytest.mark.slow
+def test_fedbuff_bimodal_staleness_appears_and_trains():
+    """Under edge-vs-datacenter heterogeneity the buffer fills from the
+    fast minority while stragglers age: staleness > 0 must appear, the
+    staleness-β coupling must kick in, and training stays healthy."""
+    st = ScheduledTrainer(
+        _trainer(n_clients=4),
+        SchedConfig(policy="fedbuff", buffer_size=2, profile="bimodal",
+                    staleness_beta_gain=1.0, staleness_bucket_max=2))
+    h = st.run(4)
+    assert max(max(e["staleness"]) for e in h) >= 1
+    assert all(np.isfinite(np.asarray(e["rewards"])).all() for e in h)
+    # weights of a stale arrival are strictly discounted
+    for e in h:
+        if max(e["staleness"]) > min(e["staleness"]):
+            ws = dict(zip(e["staleness"], e["staleness_weights"]))
+            assert ws[max(ws)] < ws[min(ws)]
+
+
+# ------------------------------------------------- deadline anchors
+def test_deadline_infinite_equals_sync():
+    sync = ScheduledTrainer(_trainer(n_clients=4, participation=0.5),
+                            SchedConfig(policy="sync"))
+    hs = sync.run(2)
+    dl = ScheduledTrainer(
+        _trainer(n_clients=4, participation=0.5),
+        SchedConfig(policy="deadline", overselect=1.0,
+                    deadline_s=float("inf")))
+    hd = dl.run(2)
+    for a, b in zip(hs, hd):
+        assert a["participants"] == b["participants"]
+        assert b["dropped"] == []
+        np.testing.assert_array_equal(np.asarray(a["rewards"]),
+                                      np.asarray(b["rewards"]))
+        assert a["round_duration"] == b["round_duration"]
+
+
+@pytest.mark.slow
+def test_deadline_drops_stragglers_and_saves_wallclock():
+    """Bimodal heterogeneity: the quantile deadline drops slow edge
+    clients and closes rounds far faster than the sync barrier."""
+    mk = lambda: _trainer(n_clients=8, seed=1)  # noqa: E731
+    sync = ScheduledTrainer(mk(), SchedConfig(policy="sync",
+                                              profile="bimodal"))
+    hs = sync.run(2)
+    # bimodal is ~75% identically-slow edge clients, so the deadline
+    # quantile must sit below the fast fraction (0.25) to cut the slow
+    # mode off — a quantile at/above it lands on a slow-client time
+    dl = ScheduledTrainer(
+        mk(), SchedConfig(policy="deadline", profile="bimodal",
+                          deadline_quantile=0.2))
+    hd = dl.run(2)
+    assert sum(len(e["dropped"]) for e in hd) > 0
+    assert hd[-1]["sim_time"] < hs[-1]["sim_time"]
+    assert all(np.isfinite(np.asarray(e["rewards"])).all() for e in hd)
+
+
+# ------------------------------------------------- cohort dispatch
+def test_build_cohorts_groups_by_static_config():
+    import dataclasses
+    base = FIRMConfig(local_steps=1)
+    alt = dataclasses.replace(base, local_steps=3)
+    plan = build_cohorts([(0, base), (1, alt), (2, base), (3, alt)])
+    assert [c.members for c in plan] == [(0, 2), (1, 3)]
+    assert plan[0].cfc.local_steps == 1 and plan[1].cfc.local_steps == 3
+    # preference lifted to a traced array: stripped from the key
+    p0 = dataclasses.replace(base, preference=(0.9, 0.1))
+    p1 = dataclasses.replace(base, preference=(0.1, 0.9))
+    assert len(build_cohorts([(0, p0), (1, p1)],
+                             lift_preference=True)) == 1
+    assert len(build_cohorts([(0, p0), (1, p1)],
+                             lift_preference=False)) == 2
+
+
+def test_cohort_dispatch_two_groups_one_round():
+    """Heterogeneous client_local_steps (FedMOA-style rates) split into
+    >= 2 distinct-config cohorts, each one vmapped program — no fallback
+    to the per-client loop — and match the loop path's results."""
+    kw = dict(n_clients=4, local_steps=2,
+              client_local_steps=(1, 1, 2, 2))
+    s_vec = _trainer(**kw).run_round()
+    assert s_vec["cohorts"] == 2
+    # 2 cohorts x (stack + round + unstack) + round-level tree ops —
+    # far below the loop's C x K x 3 per-client dispatches
+    assert s_vec["dispatches"] <= 12
+    s_loop = _trainer(vectorized_clients=False, **kw).run_round()
+    assert s_loop["dispatches"] >= 6 * 3
+    np.testing.assert_allclose(np.asarray(s_vec["rewards"]),
+                               np.asarray(s_loop["rewards"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_vec["per_client_lam"]),
+                               np.asarray(s_loop["per_client_lam"]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_vec["rewards_per_client"]),
+                               np.asarray(s_loop["rewards_per_client"]),
+                               atol=1e-5)
+    assert s_vec["comm_bytes"] == s_loop["comm_bytes"]
+
+
+def test_uniform_client_local_steps_override_single_cohort():
+    """A UNIFORM client_local_steps override forms one cohort whose K
+    differs from fc.local_steps — the vec path must honor the cohort's
+    K, not the base config's (regression: it trained K=base silently)."""
+    kw = dict(n_clients=2, local_steps=1, client_local_steps=(2, 2))
+    s_vec = _trainer(**kw).run_round()
+    assert s_vec["cohorts"] == 1
+    assert s_vec["local_steps"] == [2, 2]
+    s_loop = _trainer(vectorized_clients=False, **kw).run_round()
+    np.testing.assert_allclose(np.asarray(s_vec["rewards"]),
+                               np.asarray(s_loop["rewards"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_vec["per_client_lam"]),
+                               np.asarray(s_loop["per_client_lam"]),
+                               atol=1e-4)
+
+
+@pytest.mark.slow
+def test_cohort_dispatch_multi_round_stays_close():
+    kw = dict(n_clients=4, local_steps=2,
+              client_local_steps=(1, 2, 1, 2))
+    h_vec = _trainer(**kw).run(2)
+    h_loop = _trainer(vectorized_clients=False, **kw).run(2)
+    for a, b in zip(h_vec, h_loop):
+        np.testing.assert_allclose(np.asarray(a["rewards"]),
+                                   np.asarray(b["rewards"]), atol=2e-2)
+        assert a["comm_bytes"] == b["comm_bytes"]
+
+
+def test_fedcmoo_rejects_heterogeneous_local_steps():
+    with pytest.raises(ValueError, match="fedcmoo"):
+        _trainer(algorithm="fedcmoo", n_clients=2,
+                 client_local_steps=(1, 2))
+
+
+def test_scheduler_rejects_unknown_policy_and_fedcmoo_fedbuff():
+    with pytest.raises(ValueError, match="policy"):
+        ScheduledTrainer(_trainer(), SchedConfig(policy="psychic"))
+    st = ScheduledTrainer(_trainer(algorithm="fedcmoo"),
+                          SchedConfig(policy="fedbuff"))
+    with pytest.raises(ValueError, match="fedbuff"):
+        st.run(1)
