@@ -56,6 +56,17 @@ def bench_codec_tradeoff():
             if algorithm == "fedcmoo":      # M grads per step + the delta
                 uploads_per_round *= fc.n_objectives * fc.local_steps + 1
             measured = cell["up_bytes"] / (ROUNDS * uploads_per_round)
+            # ideal entropy-coded size of the run's final DELTA uplink
+            # payloads (int4/topk codes are far from uniform, so this
+            # quantifies the headroom a real range coder would buy at
+            # identical fidelity).  Scope: the round's adapted-param
+            # delta uploads only — fedcmoo's per-step gradient payloads
+            # never land in _last_up_payloads, hence the explicit
+            # "delta_upload" naming (headroom is raw/entropy over the
+            # SAME payload set, so it stays self-consistent per cell)
+            payloads = getattr(tr, "_last_up_payloads", None) or []
+            ent = sum(p.nbytes_entropy for p in payloads)
+            raw = sum(p.nbytes for p in payloads)
             cell.update({
                 "codec": codec,
                 "algorithm": algorithm,
@@ -63,6 +74,9 @@ def bench_codec_tradeoff():
                 "analytic_bytes_per_upload": int(analytic),
                 "measured_bytes_per_upload": int(measured),
                 "padding_overhead": round(measured / analytic, 4),
+                "entropy_bytes_per_delta_upload":
+                    int(ent / max(1, len(payloads))),
+                "entropy_headroom": round(raw / max(1, ent), 4),
             })
             out.append(row(f"codec_tradeoff_{algorithm}_{codec}", us, cell))
     return out

@@ -30,7 +30,8 @@ def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
                  local_steps=1, batch=2, preference=None, seed=0,
                  heterogeneous_rms=False, dirichlet_alpha=0.3,
                  uplink_codec="identity", downlink_codec="identity",
-                 vectorized=True, cfg=None) -> FederatedTrainer:
+                 vectorized=True, fused_rounds=1,
+                 cfg=None) -> FederatedTrainer:
     cfg = cfg or tiny_cfg()
     fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
                     local_steps=local_steps, batch_size=batch, beta=beta,
@@ -40,7 +41,8 @@ def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
                       dirichlet_alpha=dirichlet_alpha,
                       uplink_codec=uplink_codec,
                       downlink_codec=downlink_codec,
-                      vectorized_clients=vectorized)
+                      vectorized_clients=vectorized,
+                      fused_rounds=fused_rounds)
     return FederatedTrainer(cfg, fc, ec)
 
 

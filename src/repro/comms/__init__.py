@@ -11,6 +11,11 @@ Pallas-kernel hot paths (see README.md in this package).
 
 Analytic per-round models live in repro.core.comms; this package is the
 measured counterpart wired through repro.fed.engine.
+
+Every codec also implements the traced contract used by the fused
+multi-round engine (``roundtrip_traced*`` with explicit array state,
+``nbytes_static`` exact byte accounting, ``Payload.nbytes_entropy``
+ideal-coder estimates) — see README.md and repro.fed.engine.
 """
 from repro.comms.codec import (Codec, DeltaCodec, ErrorFeedback,
                                IdentityCodec, Payload, flat_to_tree,

@@ -17,6 +17,27 @@ residual before encoding and keeps the new residual (x + e) - decode(...)
 locally, so quantization/sparsification error is re-injected instead of
 lost — the standard EF trick that restores convergence under biased
 compressors (cf. PowerSGD / EF-SGD).
+
+Traced codec contract (fused multi-round engine)
+------------------------------------------------
+Next to the host-boundary ``Payload`` API every codec exposes a fully
+in-graph path the fused round scan uses:
+
+* ``roundtrip_traced(flat, state, key)`` -> (decoded, new_state) keeps
+  encode -> decode entirely inside the surrounding jit — the Payload
+  buffers are graph intermediates that never reach the host;
+* ``roundtrip_traced_stacked(flats, states, keys)`` is its (C, d)
+  stacked-client twin (quantize codecs batch ONE kernel over all rows);
+* codec state is an explicit pytree of arrays so it can ride a
+  ``lax.scan`` carry: ``init_state_traced`` / ``init_states_traced``
+  build it from the host-format state (None -> zeros — equivalent by
+  construction), ``state_to_host`` / ``states_to_host`` convert back;
+* ``nbytes_static(d)`` is the exact wire size of one payload for a
+  d-element flat vector.  Every shipped codec has data-INdependent
+  payload sizes (codes/scales/index/value buffer shapes are functions of
+  d alone), so the comms ledger and the scheduler's time models keep
+  exact byte accounting without a device->host sync per round.
+  ``tests/test_fed_fused.py`` pins ``nbytes_static == Payload.nbytes``.
 """
 from __future__ import annotations
 
@@ -25,6 +46,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -42,6 +64,41 @@ class Payload:
     def nbytes(self) -> int:
         return int(sum(a.size * a.dtype.itemsize
                        for a in self.arrays.values()))
+
+    @property
+    def nbytes_entropy(self) -> int:
+        """Size estimate under an ideal entropy coder (host-side, lazy).
+
+        The discrete code buffers are charged their empirical zeroth-order
+        entropy instead of their fixed-width layout — int4/topk codes are
+        far from uniform, so this quantifies the headroom a real range
+        coder would buy.  f32 side buffers (scales, kept values, sketch
+        factors) stay at their raw size; codecs whose buffers are all f32
+        report ``nbytes`` unchanged.
+        """
+        bits = self.meta.get("bits")
+        if bits in (4, 8):
+            codes = np.asarray(self.arrays["codes"])
+            if bits == 4:                 # nibble symbols, not packed bytes
+                u = codes.astype(np.uint8)
+                codes = np.concatenate([u >> 4, u & 0xF], axis=None)
+            code_bytes = -(-_entropy_total_bits(codes) // 8)
+            return int(code_bytes + self.arrays["scales"].size
+                       * self.arrays["scales"].dtype.itemsize)
+        if "indices" in self.arrays:      # topk: gap-coded sorted indices
+            idx = np.asarray(self.arrays["indices"], np.int64)
+            gaps = np.diff(idx, prepend=0)
+            idx_bytes = -(-_entropy_total_bits(gaps) // 8)
+            vals = self.arrays["values"]
+            return int(idx_bytes + vals.size * vals.dtype.itemsize)
+        return self.nbytes
+
+
+def _entropy_total_bits(symbols) -> int:
+    """Total bits of a symbol array under its empirical distribution."""
+    _, counts = np.unique(np.asarray(symbols).ravel(), return_counts=True)
+    p = counts / counts.sum()
+    return int(np.ceil(float(-(p * np.log2(p)).sum()) * counts.sum()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +144,9 @@ class Codec:
 
     name = "codec"
     stateful = False
+    # the flat-vector transform is pure jnp (jit-safe), so the fused
+    # round scan may inline encode->decode via the traced API below
+    traceable = True
 
     # -- flat-vector transform (override) -------------------------------
     def encode_flat(self, flat: jnp.ndarray, *, key=None
@@ -98,6 +158,17 @@ class Codec:
 
     def bits_per_param(self, d: int) -> float:
         """Analytic uplink cost model (exact for the buffer layout)."""
+        raise NotImplementedError
+
+    def nbytes_static(self, d: int) -> int:
+        """Exact wire bytes of one payload for a d-element flat vector.
+
+        All shipped codecs have data-independent payload sizes, so this
+        equals ``Payload.nbytes`` without materializing a payload — the
+        fused multi-round engine accounts bytes from it with zero host
+        syncs.  Subclasses whose layout differs from a pure
+        bits-per-param model (padding, per-block scales) override it.
+        """
         raise NotImplementedError
 
     def _flat_payload(self, flat: jnp.ndarray, spec: "TreeSpec", *,
@@ -181,6 +252,67 @@ class Codec:
             decs.append(d)
         return payloads, new_states, jnp.stack(decs)
 
+    # -- traced (in-graph) API -------------------------------------------
+    # See the module docstring: encode -> decode stays inside the caller's
+    # jit, codec state is an explicit pytree of arrays (scan-carry ready),
+    # and byte accounting comes from nbytes_static instead of a payload.
+
+    def init_state_traced(self, d: int, host_state=None):
+        """Traced-state pytree for ONE stream (downlink broadcast)."""
+        return ()
+
+    def state_to_host(self, state):
+        """Inverse of ``init_state_traced`` after the fused run."""
+        return None
+
+    def init_states_traced(self, d: int, host_states):
+        """Stacked traced state for C client streams (uplink carry)."""
+        return ()
+
+    def states_to_host(self, states, n: int):
+        return [None] * n
+
+    def roundtrip_traced(self, flat: jnp.ndarray, state=(), *, key=None):
+        """In-graph encode + decode of one (d,) flat vector.
+
+        Returns (decoded, new_state).  The default reuses the flat-vector
+        transform — exact for stateless codecs; stateful wrappers
+        (ErrorFeedback / DeltaCodec) override with explicit array state.
+        The intermediate Payload holds tracers and never reaches the
+        host; its static meta (shapes, d) is resolved at trace time.
+
+        Both ends of the transform sit behind an optimization barrier, a
+        best-effort marker of the wire boundary (on a real wire the
+        payload bits ARE materialized).  Note the barrier does NOT stop
+        XLA:CPU's fma/fms contraction across it — which is why the
+        consumers that need bit-parity with the host boundary (the EF
+        residual, see ``ErrorFeedback``) compute their arithmetic in the
+        same jitted composition on both paths instead of relying on it.
+        """
+        decoded, state = self._roundtrip_traced_raw(
+            jax.lax.optimization_barrier(flat), state, key=key)
+        return jax.lax.optimization_barrier(decoded), state
+
+    def _roundtrip_traced_raw(self, flat, state, *, key=None):
+        payload = self._flat_payload(flat, None, key=key)
+        return self.decode_flat(payload)[:flat.size], state
+
+    def roundtrip_traced_stacked(self, flats: jnp.ndarray, states=(), *,
+                                 keys=None):
+        """``roundtrip_traced`` over the stacked (C, d) client axis.
+
+        Row c is bit-identical to ``roundtrip_traced(flats[c], ...,
+        key=keys[c])``; quantize codecs override with the single batched
+        kernel dispatch the host-boundary stacked path uses.  The wire
+        barriers sit OUTSIDE the vmap (optimization_barrier has no
+        batching rule).
+        """
+        def one(f, k, s):
+            return self._roundtrip_traced_raw(f, s, key=k)
+        decoded, states = jax.vmap(one)(
+            jax.lax.optimization_barrier(flats), keys, states)
+        return jax.lax.optimization_barrier(decoded), states
+
 
 class IdentityCodec(Codec):
     """Raw f32 — the baseline every ratio in the benchmarks is against."""
@@ -196,12 +328,25 @@ class IdentityCodec(Codec):
     def bits_per_param(self, d: int) -> float:
         return 32.0
 
+    def nbytes_static(self, d: int) -> int:
+        return 4 * d
+
 
 class ErrorFeedback(Codec):
     """Residual-accumulating wrapper around a lossy inner codec.
 
     state is the client-local residual flat vector (starts at zero);
     decode is the inner codec's (the server never sees the residual).
+
+    The decode + residual update runs inside ONE jitted program (the
+    traced roundtrip), for two reasons: it is one dispatch instead of a
+    chain of eager ops, and — decisively — XLA CPU contracts the
+    dequantize multiply into the residual subtract (an fms) whenever
+    both sit in the same program, which no barrier prevents.  Computing
+    the residual the same way on the host boundary and inside the fused
+    round scan keeps the two engines bit-identical.  Payload buffers
+    still come from the eager inner encode (deterministic given the same
+    adjusted input, so they match the jitted decode's codes exactly).
     """
 
     stateful = True
@@ -209,31 +354,41 @@ class ErrorFeedback(Codec):
     def __init__(self, inner: Codec):
         self.inner = inner
         self.name = inner.name + "+ef"
+        self._rt_flat_jit = None
+        self._rt_stacked_jit = None
 
-    def _encode_flat_with_decoded(self, flat, spec, state, key):
-        if state is not None:
-            flat = flat + state
-        payload = self.inner._flat_payload(flat, spec, key=key)
-        decoded = self.inner.decode_flat(payload)[:flat.size]
-        return payload, flat - decoded, decoded
+    # jitted handles are cached per codec instance (one instance serves
+    # every client of a trainer, so each trainer compiles these once)
+    def _jit_rt_flat(self):
+        if self._rt_flat_jit is None:
+            self._rt_flat_jit = jax.jit(
+                lambda f, s, k: self.roundtrip_traced(f, s, key=k))
+        return self._rt_flat_jit
 
-    def _encode_with_decoded(self, tree, state, key):
-        flat, spec = tree_to_flat(tree)
-        return self._encode_flat_with_decoded(flat, spec, state, key)
+    def _jit_rt_stacked(self):
+        if self._rt_stacked_jit is None:
+            self._rt_stacked_jit = jax.jit(
+                lambda f, s, k: self.roundtrip_traced_stacked(f, s,
+                                                              keys=k))
+        return self._rt_stacked_jit
 
     def encode(self, tree, state=None, *, key=None):
-        payload, residual, _ = self._encode_with_decoded(tree, state, key)
+        flat, spec = tree_to_flat(tree)
+        payload, residual, _ = self.roundtrip_flat(flat, spec, state,
+                                                   key=key)
         return payload, residual
 
     def roundtrip(self, tree, state=None, *, key=None):
-        payload, residual, decoded = self._encode_with_decoded(
-            tree, state, key)
-        return payload, residual, flat_to_tree(decoded,
-                                               payload.meta["spec"])
+        flat, spec = tree_to_flat(tree)
+        payload, residual, decoded = self.roundtrip_flat(flat, spec,
+                                                         state, key=key)
+        return payload, residual, flat_to_tree(decoded, spec)
 
     def roundtrip_flat(self, flat, spec, state=None, *, key=None):
-        payload, residual, decoded = self._encode_flat_with_decoded(
-            flat, spec, state, key)
+        st = jnp.zeros_like(flat) if state is None else state
+        adj = flat if state is None else flat + state
+        payload = self.inner._flat_payload(adj, spec, key=key)
+        decoded, residual = self._jit_rt_flat()(flat, st, key)
         return payload, residual, decoded
 
     def roundtrip_stacked(self, flats, spec, states=None, *, keys=None):
@@ -244,17 +399,54 @@ class ErrorFeedback(Codec):
         so stacking commutes with it."""
         c = flats.shape[0]
         states = list(states) if states is not None else [None] * c
+        keys = list(keys) if keys is not None else [None] * c
+        if any(k is None for k in keys):
+            # per-row base loop keeps the None-key (deterministic
+            # rounding) semantics of the inner codec
+            return super().roundtrip_stacked(flats, spec, states,
+                                             keys=keys)
+        sts = jnp.stack([jnp.zeros_like(flats[i]) if s is None else s
+                         for i, s in enumerate(states)])
         adj = jnp.stack([flats[i] if states[i] is None
                          else flats[i] + states[i] for i in range(c)])
-        payloads, _, decoded = self.inner.roundtrip_stacked(
-            adj, spec, None, keys=keys)
-        residual = adj - decoded
+        payloads, _ = self.inner.encode_stacked(adj, spec, keys=keys)
+        decoded, residual = self._jit_rt_stacked()(flats, sts,
+                                                   jnp.stack(keys))
         return payloads, [residual[i] for i in range(c)], decoded
 
     def encode_stacked(self, flats, spec, states=None, *, keys=None):
         payloads, new_states, _ = self.roundtrip_stacked(
             flats, spec, states, keys=keys)
         return payloads, new_states
+
+    # -- traced API: the residual is the state array ---------------------
+    # A host state of None and a traced state of zeros are the same
+    # residual by construction (x + 0 == x), so the conversions are
+    # lossless in both directions.
+
+    def init_state_traced(self, d: int, host_state=None):
+        return (jnp.zeros((d,), jnp.float32) if host_state is None
+                else jnp.asarray(host_state, jnp.float32))
+
+    def state_to_host(self, state):
+        return state
+
+    def init_states_traced(self, d: int, host_states):
+        return jnp.stack([self.init_state_traced(d, s)
+                          for s in host_states])
+
+    def states_to_host(self, states, n: int):
+        return [states[i] for i in range(n)]
+
+    def roundtrip_traced(self, flat, state, *, key=None):
+        adj = flat + state
+        dec, _ = self.inner.roundtrip_traced(adj, (), key=key)
+        return dec, adj - dec
+
+    def roundtrip_traced_stacked(self, flats, states, *, keys=None):
+        adj = flats + states
+        dec, _ = self.inner.roundtrip_traced_stacked(adj, (), keys=keys)
+        return dec, adj - dec
 
     def decode(self, payload: Payload):
         return self.inner.decode(payload)
@@ -267,6 +459,9 @@ class ErrorFeedback(Codec):
 
     def bits_per_param(self, d: int) -> float:
         return self.inner.bits_per_param(d)
+
+    def nbytes_static(self, d: int) -> int:
+        return self.inner.nbytes_static(d)
 
 
 class DeltaCodec(Codec):
@@ -324,5 +519,53 @@ class DeltaCodec(Codec):
             "delta codec reconstruction needs the receiver's reference; "
             "use roundtrip/roundtrip_flat")
 
+    # -- traced API: state = (reference reconstruction, inner state) -----
+    # A host reference of None and a traced reference of zeros encode the
+    # same first transmission (flat - 0 is the full parameters).
+
+    def init_state_traced(self, d: int, host_state=None):
+        ref, inner = (None, None) if host_state is None else host_state
+        ref = (jnp.zeros((d,), jnp.float32) if ref is None
+               else jnp.asarray(ref, jnp.float32))
+        return (ref, self.inner.init_state_traced(d, inner))
+
+    def state_to_host(self, state):
+        ref, inner = state
+        return (ref, self.inner.state_to_host(inner))
+
+    def init_states_traced(self, d: int, host_states):
+        refs, inners = [], []
+        for s in host_states:
+            ref, inner = self.init_state_traced(d, s)
+            refs.append(ref)
+            inners.append(inner)
+        # inner states are () for every shipped inner codec family except
+        # EF, whose residual rows stack
+        inner_stacked = (() if (not inners or isinstance(inners[0], tuple))
+                         else jnp.stack(inners))
+        return (jnp.stack(refs), inner_stacked)
+
+    def states_to_host(self, states, n: int):
+        refs, inner = states
+        inner_host = self.inner.states_to_host(inner, n)
+        return [(refs[i], inner_host[i]) for i in range(n)]
+
+    def roundtrip_traced(self, flat, state, *, key=None):
+        ref, inner_state = state
+        dec_delta, inner_state = self.inner.roundtrip_traced(
+            flat - ref, inner_state, key=key)
+        decoded = ref + dec_delta
+        return decoded, (decoded, inner_state)
+
+    def roundtrip_traced_stacked(self, flats, states, *, keys=None):
+        refs, inner_states = states
+        dec_delta, inner_states = self.inner.roundtrip_traced_stacked(
+            flats - refs, inner_states, keys=keys)
+        decoded = refs + dec_delta
+        return decoded, (decoded, inner_states)
+
     def bits_per_param(self, d: int) -> float:
         return self.inner.bits_per_param(d)
+
+    def nbytes_static(self, d: int) -> int:
+        return self.inner.nbytes_static(d)

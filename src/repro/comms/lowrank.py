@@ -56,3 +56,7 @@ class LowRankCodec(Codec):
     def bits_per_param(self, d: int) -> float:
         a, b = _matrix_shape(d)
         return 32.0 * self.rank * (a + b) / d
+
+    def nbytes_static(self, d: int) -> int:
+        a, b = _matrix_shape(d)
+        return 4 * self.rank * (a + b)

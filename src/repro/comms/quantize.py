@@ -79,6 +79,13 @@ class QuantizeCodec(Codec):
     def bits_per_param(self, d: int) -> float:
         return self.bits + 32.0 / BLOCK
 
+    def nbytes_static(self, d: int) -> int:
+        # padded (rows, BLOCK) codes (int8: 1 byte, int4: packed nibbles)
+        # + one f32 scale per row — exactly the measured Payload layout
+        rows = -(-d // BLOCK)
+        code_bytes = rows * (BLOCK if self.bits == 8 else BLOCK // 2)
+        return code_bytes + rows * 4
+
     # -- stacked-client batched path ------------------------------------
     def _quantize_stacked(self, flats, keys):
         """(C, d) -> one kernel dispatch over the concatenated blocks.
@@ -134,3 +141,33 @@ class QuantizeCodec(Codec):
         return (payloads,
                 list(states) if states is not None else [None] * c,
                 decoded)
+
+    # -- traced in-graph path -------------------------------------------
+    def roundtrip_traced_stacked(self, flats, states=(), *, keys=None):
+        """Same batched quantize/dequantize as ``roundtrip_stacked`` with
+        the codes/scales as graph intermediates — ONE kernel dispatch
+        over all C clients' blocks, bit-identical rows to per-client
+        ``roundtrip_traced`` calls.  ``keys`` is a (C, 2) key array (the
+        fused engine always supplies per-client keys).  The wire
+        boundary is marked with (best-effort) optimization barriers —
+        see ``Codec.roundtrip_traced`` for what they do and do not
+        guarantee."""
+        flats = jax.lax.optimization_barrier(flats)
+        c, d = flats.shape
+        rows = -(-d // BLOCK)
+        pad = rows * BLOCK - d
+        x = jnp.pad(flats, ((0, 0), (0, pad))) if pad else flats
+        x = x.reshape(c * rows, BLOCK)
+        if self.stochastic and keys is not None:
+            rbits = jax.vmap(
+                lambda k: jax.random.bits(k, (rows, BLOCK), jnp.uint32)
+            )(keys).reshape(c * rows, BLOCK)
+        else:
+            rbits = jnp.tile(jnp.full((rows, BLOCK), _DET_BITS,
+                                      jnp.uint32), (c, 1))
+        codes, scales = ops.quantize(x, rbits, self.qmax,
+                                     use_pallas=self.use_pallas)
+        decoded = ops.dequantize(codes, scales, use_pallas=self.use_pallas)
+        decoded = jax.lax.optimization_barrier(
+            decoded.reshape(c, rows * BLOCK)[:, :d])
+        return decoded, states

@@ -61,3 +61,7 @@ class TopKCodec(Codec):
 
     def bits_per_param(self, d: int) -> float:
         return 64.0 * self.frac
+
+    def nbytes_static(self, d: int) -> int:
+        # k (int32 index, f32 value) pairs; k depends on d alone
+        return 8 * max(1, int(round(self.frac * d)))

@@ -63,3 +63,23 @@ def fedcmoo_round_lambda(per_client_grads: Sequence[Sequence],
         # all clients must use the SAME sketch for the Gram to be consistent
         mats = [sketch(m, compress_rank, keys[0]) for m in mats]
     return server_solve(mats, **solve_kw)
+
+
+def fedcmoo_round_lambda_stacked(stacked: jnp.ndarray,
+                                 compress_rank: Optional[int] = None,
+                                 key=None, **solve_kw) -> jnp.ndarray:
+    """Batched-exchange twin of ``fedcmoo_round_lambda``.
+
+    ``stacked`` is the (C, M, d) array of per-client gradient matrices as
+    the server decodes them — the stacked codec boundary feeds the λ
+    solve directly, with no per-client pytree rebuild or host loop.  The
+    client average keeps ``server_solve``'s list-sum association so both
+    entry points return identical λ.
+    """
+    mats = [stacked[c] for c in range(stacked.shape[0])]
+    if compress_rank:
+        keys = jax.random.split(key, len(mats))
+        # all clients must use the SAME sketch for the Gram to be
+        # consistent (and for λ parity with fedcmoo_round_lambda)
+        mats = [sketch(m, compress_rank, keys[0]) for m in mats]
+    return server_solve(mats, **solve_kw)

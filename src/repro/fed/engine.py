@@ -55,6 +55,27 @@ Participation sampling draws from a NAMED PRNG stream keyed on
 consumed — so the scheduler subsystem's deadline over-selection and
 dropout (repro.fed.sched) reproduce the same client draws across
 policies.
+
+Fused multi-round execution (PR 4)
+----------------------------------
+``EngineConfig.fused_rounds = R`` lifts the WHOLE round — participation
+fold-in, downlink broadcast, the vectorized local phase, delta
+extraction, the stacked uplink roundtrip, and the FedAvg aggregate —
+into a round-level ``jax.lax.scan``: R rounds run as ONE jitted dispatch
+with ONE host transfer at the end of the chunk (see ``FusedCarry`` for
+the donated carry layout and ``_jit_fused_rounds`` for the body).  The
+codecs run through their traced contract (``repro.comms``:
+``roundtrip_traced*`` with explicit array state, ``nbytes_static`` byte
+accounting), so the comms ledger and the scheduler's time models keep
+exact bytes with zero per-round host syncs.  Results are bit-identical
+to the per-round path: the body replicates ``run_round``'s PRNG split
+sequence exactly, and the error-feedback residual is computed in the
+same jitted composition on both paths (XLA contracts the dequantize
+multiply into the residual subtract; doing it identically everywhere is
+what keeps the trajectories exact).  ``run()`` chunks the horizon by R
+and falls back to per-round execution for fedcmoo (host-driven λ
+exchange), multi-cohort configs, and the deadline/fedbuff schedulers;
+the ``sync`` scheduler policy rides the fused path unchanged.
 """
 from __future__ import annotations
 
@@ -106,16 +127,16 @@ def _jit_sample_block(batch_size: int, prompt_len: int, vocab: int):
         seeds, counts, probs, batch_size, prompt_len, vocab))
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+def _make_round_fn(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
                    prompt_len: int, max_new: int, length_tol: int,
                    has_pref: bool):
-    """One round's entire local phase as a single jitted program.
+    """One round's entire local phase as a pure function.
 
     vmap over the stacked client axis x lax.scan over the K local steps:
     sampling, generation, reward scoring, reference logprobs and the
-    local update all fuse into one dispatch.  The stacked client state
-    (arg 0) is donated.
+    local update all fuse into one program.  Jitted standalone by
+    ``_jit_vec_round`` (the per-round path) and inlined into the
+    round-level scan by ``_jit_fused_rounds``.
     """
     k_steps = cfc.local_steps
     m = cfc.n_objectives
@@ -155,7 +176,18 @@ def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
                                  (jnp.arange(k_steps), gen_keys))
         return final, ms
 
-    return jax.jit(round_fn, donate_argnums=(0,))
+    return round_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+                   prompt_len: int, max_new: int, length_tol: int,
+                   has_pref: bool):
+    """The per-round dispatch of ``_make_round_fn`` (stacked state
+    donated)."""
+    return jax.jit(_make_round_fn(cfg, cfc, algorithm, prompt_len,
+                                  max_new, length_tol, has_pref),
+                   donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -202,6 +234,23 @@ def _jit_vec_fedcmoo_apply(cfc: FIRMConfig):
 @functools.lru_cache(maxsize=None)
 def _jit_unstack(n: int):
     return jax.jit(lambda tree: tuple(fedavg.unstack_tree(tree, n)))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_grads_flat(m: int):
+    """M stacked gradient trees (leading (C,) axis) -> (C, M, d) f32.
+
+    Row (c, j) is bit-identical to ``tree_to_flat`` of client c's j-th
+    gradient tree — the batched form of the fedcmoo server exchange's
+    per-client flatten."""
+
+    def fn(grads):
+        mats = [jnp.concatenate(
+            [l.astype(jnp.float32).reshape(l.shape[0], -1)
+             for l in jax.tree_util.tree_leaves(grads[j])], axis=1)
+            for j in range(m)]
+        return jnp.stack(mats, axis=1)
+    return jax.jit(fn)
 
 
 _stack_trees_jit = jax.jit(lambda *trees: fedavg.stack_trees(trees))
@@ -257,6 +306,179 @@ class LocalPhaseResult(NamedTuple):
     rewards_pc: jnp.ndarray          # (P, M) per-client mean over steps
 
 
+class FusedCarry(NamedTuple):
+    """Donated carry of the round-level ``lax.scan`` (fused_rounds path).
+
+    Everything a round mutates rides the scan carry as arrays, so R
+    rounds are ONE dispatch with zero host round-trips in between:
+
+      states    stacked ClientState for ALL C clients (leading (C,) axis;
+                critic/opt/λ/KL/step persist across rounds, trainable is
+                overwritten by each round's decoded broadcast)
+      ul_state  stacked traced uplink-codec state — e.g. the (C, d) error
+                feedback residuals; () for stateless codecs
+      dl_state  traced downlink-codec state — e.g. the DeltaCodec
+                (reference reconstruction, inner state) pair
+      counts    (C,) per-client prompt-stream cursors
+      rng       the MAIN PRNG stream key; the body replicates run_round's
+                exact split sequence (downlink key -> K x P generation
+                keys step-major -> P uplink keys) for bit parity with the
+                per-round path
+
+    The server parameters are carried too but enter the jit as a
+    NON-donated argument: at trainer init they alias ``ref_params``
+    leaves, which must survive the call.
+    """
+    states: object
+    ul_state: object
+    dl_state: object
+    counts: jnp.ndarray
+    rng: jnp.ndarray
+
+
+def _split_next(rng):
+    """In-graph twin of ``FederatedTrainer._next_key``."""
+    out = jax.random.split(rng)
+    return out[0], out[1]
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+                      prompt_len: int, max_new: int, length_tol: int,
+                      has_pref: bool, uplink_spec: str, downlink_spec: str,
+                      spec, n_clients: int, n_part: int):
+    """R federated rounds as ONE jitted program (round-level lax.scan).
+
+    The scan body is a faithful in-graph transcription of ``run_round``
+    on the vectorized path: participation fold-in from the named stream,
+    downlink roundtrip (traced codec contract), the cohort local phase
+    (``_make_round_fn``), batched delta extraction, stacked uplink
+    roundtrip with carried codec state, and the weighted FedAvg
+    aggregate.  Per-round summary statistics accumulate as stacked scan
+    outputs — the caller does ONE host transfer per R rounds.  R itself
+    stays out of this builder's cache key (jit specializes on the length
+    of ``round_idxs``), so trailing partial chunks reuse the builder.
+    """
+    round_fn = _make_round_fn(cfg, cfc, algorithm, prompt_len, max_new,
+                              length_tol, has_pref)
+    ul = make_codec(uplink_spec)
+    dl = make_codec(downlink_spec)
+    k_steps = cfc.local_steps
+    full = n_part >= n_clients
+
+    def fused(carry, global_tr, round_idxs, part_base, frozen, ref_params,
+              seeds_all, probs_all, band_h_all, band_x_all, pref_all,
+              lin_w):
+
+        def body(c, round_idx):
+            (states, g_tree, ul_state, dl_state, counts, rng) = c
+            rng, dl_key = _split_next(rng)
+            flat_g = jnp.concatenate(
+                [l.astype(jnp.float32).reshape(-1)
+                 for l in jax.tree_util.tree_leaves(g_tree)])
+            bcast_flat, dl_state = dl.roundtrip_traced(flat_g, dl_state,
+                                                       key=dl_key)
+            broadcast = codec_lib.flat_to_tree(bcast_flat, spec)
+
+            if full:
+                idx = jnp.arange(n_clients, dtype=jnp.int32)
+                seeds, probs = seeds_all, probs_all
+                band_h, band_x = band_h_all, band_x_all
+                pref = pref_all if has_pref else None
+                counts0 = counts
+                part_states = states
+                ul_part = ul_state
+            else:
+                pk = jax.random.fold_in(part_base, round_idx)
+                idx = jnp.sort(jax.random.choice(
+                    pk, n_clients, (n_part,), replace=False)
+                ).astype(jnp.int32)
+                seeds, probs = seeds_all[idx], probs_all[idx]
+                band_h, band_x = band_h_all[idx], band_x_all[idx]
+                pref = pref_all[idx] if has_pref else None
+                counts0 = counts[idx]
+                part_states = jax.tree_util.tree_map(
+                    lambda x: x[idx], states)
+                ul_part = jax.tree_util.tree_map(
+                    lambda x: x[idx], ul_state)
+
+            # every participant adopts the decoded broadcast
+            part_states = part_states._replace(
+                trainable=jax.tree_util.tree_map(
+                    lambda b: jnp.broadcast_to(b, (n_part,) + b.shape),
+                    broadcast))
+
+            # generation keys in the canonical loop order (step-major)
+            gks = []
+            for _k in range(k_steps):
+                row = []
+                for _p in range(n_part):
+                    rng, kk = _split_next(rng)
+                    row.append(kk)
+                gks.append(jnp.stack(row))
+            gen_keys = jnp.stack(gks)
+
+            new_part, ms = round_fn(part_states, frozen, ref_params,
+                                    seeds, counts0, probs, band_h,
+                                    band_x, gen_keys, pref, lin_w)
+
+            flat_deltas = jnp.concatenate(
+                [(a - b).astype(jnp.float32).reshape(a.shape[0], -1)
+                 for a, b in zip(
+                     jax.tree_util.tree_leaves(new_part.trainable),
+                     jax.tree_util.tree_leaves(broadcast))], axis=1)
+            up_keys = []
+            for _p in range(n_part):
+                rng, kk = _split_next(rng)
+                up_keys.append(kk)
+            decoded, ul_part = ul.roundtrip_traced_stacked(
+                flat_deltas, ul_part, keys=jnp.stack(up_keys))
+
+            w = fedavg.staleness_weights(jnp.zeros(n_part, jnp.float32),
+                                         jnp.float32(0.5))
+            agg = fedavg.fedavg_flat_weighted(decoded, w)
+            g_tree = jax.tree_util.tree_map(
+                lambda b, d: b + d, broadcast,
+                codec_lib.flat_to_tree(agg, spec))
+
+            if full:
+                states = new_part
+                ul_state = ul_part
+                counts = counts + k_steps
+            else:
+                states = jax.tree_util.tree_map(
+                    lambda f, u: f.at[idx].set(u), states, new_part)
+                ul_state = jax.tree_util.tree_map(
+                    lambda f, u: f.at[idx].set(u), ul_state, ul_part)
+                counts = counts.at[idx].add(k_steps)
+
+            lams = ms["lam"][-1]                              # (P, M)
+            ys = {
+                # staged means match _local_phase_vectorized bit-for-bit
+                # (see the comment there)
+                "rewards": ms["rewards"].mean(0).mean(0),
+                "lam_mean": lams.mean(0),
+                "lam_disagreement":
+                    drift.lambda_disagreement(lams)["pairwise_mean"],
+                "param_drift":
+                    drift.param_drift_stacked(new_part.trainable),
+                "kl": ms["kl"].mean(0).mean(0),
+                "per_client_lam": lams,
+                "rewards_per_client": ms["rewards"].mean(0),
+                "participants": idx,
+            }
+            return (states, g_tree, ul_state, dl_state, counts, rng), ys
+
+        init = (carry.states, global_tr, carry.ul_state, carry.dl_state,
+                carry.counts, carry.rng)
+        (states, g_tree, ul_state, dl_state, counts, rng), ys = \
+            jax.lax.scan(body, init, round_idxs)
+        return (FusedCarry(states, ul_state, dl_state, counts, rng),
+                g_tree, ys)
+
+    return jax.jit(fused, donate_argnums=(0,))
+
+
 @dataclasses.dataclass
 class EngineConfig:
     algorithm: str = "firm"
@@ -274,6 +496,14 @@ class EngineConfig:
     # stacked client axis (falls back to the per-client loop when
     # per-client static configs diverge; see module docstring)
     vectorized_clients: bool = True
+    # fuse R federated rounds into ONE jitted program (round-level
+    # lax.scan with the traced codec contract): 1 = today's per-round
+    # dispatch; >1 amortizes Python dispatch and the per-round host
+    # transfer over R rounds.  Requires the single-cohort vectorized
+    # path (firm/firm_unreg/linear); run() falls back to per-round
+    # execution otherwise (fedcmoo's per-step server exchange and the
+    # deadline/fedbuff schedulers are inherently host-driven).
+    fused_rounds: int = 1
 
 
 class FederatedTrainer:
@@ -362,6 +592,9 @@ class FederatedTrainer:
             if fc.client_preferences is not None else None)
         # engine-level jitted dispatch counter (round_throughput benchmark)
         self.jit_dispatches = 0
+        # last round's uplink payloads (per-round path only; offline
+        # payload analysis, e.g. entropy estimates in codec_tradeoff)
+        self._last_up_payloads: List = []
 
     # ------------------------------------------------------------------
     def _fc_for_algorithm(self) -> FIRMConfig:
@@ -449,6 +682,25 @@ class FederatedTrainer:
         mode, _ = self._local_phase_mode(list(range(self.fc.n_clients)))
         return mode != "loop"
 
+    def _fused_mode(self):
+        """(eligible, cohort cfc) for the fused multi-round program.
+
+        Fused rounds need every client on ONE vmapped cohort (any subset
+        of a homogeneous-config population is one cohort, so per-round
+        participation sampling stays safe), a client-local algorithm
+        (fedcmoo's per-step λ exchange is host-driven), and codecs that
+        support the traced contract.
+        """
+        if self.ec.algorithm not in ("firm", "firm_unreg", "linear"):
+            return False, None
+        mode, plan = self._local_phase_mode(list(range(self.fc.n_clients)))
+        if mode != "vec":
+            return False, None
+        if not (getattr(self.uplink_codec, "traceable", False)
+                and getattr(self.downlink_codec, "traceable", False)):
+            return False, None
+        return True, plan[0].cfc
+
     # ------------------------------------------------------------------
     def _aggregate_flat(self, anchor, flats, staleness,
                         staleness_pow: float = 0.5):
@@ -503,6 +755,9 @@ class FederatedTrainer:
         for ci, c in enumerate(participants):
             self._uplink_state[c] = new_states[ci]
             self.ledger.send_up(payloads[ci])
+        # kept for offline payload analysis (entropy-coded size estimates
+        # in benchmarks/codec_tradeoff.py) — references only, no copies
+        self._last_up_payloads = payloads
         self.global_trainable = self._aggregate_flat(
             broadcast, decoded, jnp.zeros(len(participants), jnp.float32))
         self.ledger.next_round()
@@ -535,6 +790,111 @@ class FederatedTrainer:
         }
         self.history.append(summary)
         return summary
+
+    # ------------------------------------------------- fused rounds path
+    def run_rounds_fused(self, rounds: int) -> List[dict]:
+        """R rounds as ONE jitted dispatch + ONE host transfer.
+
+        See ``FusedCarry`` for the scan-carry layout and
+        ``_jit_fused_rounds`` for the round body.  Byte accounting uses
+        the codecs' exact ``nbytes_static`` sizes (no payloads are
+        materialized), and the per-round summaries match ``run_round``'s
+        except that ``dispatches`` is the chunk total amortized per round
+        and a ``fused`` key records the chunk length.
+        """
+        ok, cfc = self._fused_mode()
+        if not ok:
+            raise ValueError(
+                "fused_rounds requires the single-cohort vectorized path "
+                "(firm/firm_unreg/linear, homogeneous static configs) and "
+                "traceable codecs; use run()/run_round() instead")
+        fc = self.fc
+        c_all = fc.n_clients
+        n_part = min(c_all, max(1, int(round(fc.participation * c_all))))
+        has_pref = self._stacked_pref is not None
+        cfc_t = (dataclasses.replace(cfc, preference=None)
+                 if has_pref else cfc)
+        alg = "linear" if self.ec.algorithm == "linear" else "firm"
+        lin_w = None
+        if self.ec.algorithm == "linear":
+            lin_w = jnp.asarray(
+                self.ec.linear_weights
+                or [1.0 / cfc.n_objectives] * cfc.n_objectives, jnp.float32)
+        d = self.d_trainable
+        dispatch0 = self.jit_dispatches
+
+        # stacking copies every per-client buffer, so the donated carry
+        # never aliases live host state (client_states / ref_params)
+        stacked_states = _stack_trees_jit(*self.client_states)
+        self.jit_dispatches += 1
+        carry = FusedCarry(
+            states=stacked_states,
+            ul_state=self.uplink_codec.init_states_traced(
+                d, self._uplink_state),
+            dl_state=self.downlink_codec.init_state_traced(
+                d, self._downlink_state),
+            counts=jnp.asarray([ds._count for ds in self.datasets],
+                               jnp.int32),
+            rng=self._rng)
+        round_idxs = jnp.arange(self._round_idx, self._round_idx + rounds,
+                                dtype=jnp.int32)
+        fn = _jit_fused_rounds(self.cfg, cfc_t, alg, self.ec.prompt_len,
+                               self.ec.max_new, self._length_tol, has_pref,
+                               self.ec.uplink_codec, self.ec.downlink_codec,
+                               self._delta_spec, c_all, n_part)
+        carry, new_global, ys = fn(
+            carry, self.global_trainable, round_idxs, self._part_rng_base,
+            self.frozen, self.ref_params, self._seeds_all, self._probs_all,
+            self._bands_h, self._bands_x, self._stacked_pref, lin_w)
+        self.jit_dispatches += 1
+
+        # ONE host transfer for the whole chunk's metrics
+        host = jax.device_get({"ys": ys, "counts": carry.counts})
+        self.client_states = list(_jit_unstack(c_all)(carry.states))
+        self.jit_dispatches += 1
+        self.global_trainable = new_global
+        self._uplink_state = self.uplink_codec.states_to_host(
+            carry.ul_state, c_all)
+        self._downlink_state = self.downlink_codec.state_to_host(
+            carry.dl_state)
+        self._rng = carry.rng
+        for ci, ds in enumerate(self.datasets):
+            ds._count = int(host["counts"][ci])
+        self._round_idx += rounds
+
+        up_static = self.uplink_codec.nbytes_static(d)
+        down_static = self.downlink_codec.nbytes_static(d)
+        per_round_dispatches = (self.jit_dispatches - dispatch0) / rounds
+        ys_h = host["ys"]
+        out = []
+        for r in range(rounds):
+            parts = [int(x) for x in ys_h["participants"][r]]
+            p = len(parts)
+            self.ledger.down_bytes += p * down_static
+            self.ledger.up_bytes += p * up_static
+            self.ledger.next_round()
+            summary = {
+                "rewards": ys_h["rewards"][r],
+                "lam_mean": ys_h["lam_mean"][r],
+                "lam_disagreement": float(ys_h["lam_disagreement"][r]),
+                "param_drift": float(ys_h["param_drift"][r]),
+                "kl": float(ys_h["kl"][r]),
+                "comm_bytes": self.ledger.total,
+                "up_bytes": self.ledger.up_bytes,
+                "down_bytes": self.ledger.down_bytes,
+                "participants": parts,
+                "per_client_lam": ys_h["per_client_lam"][r],
+                "rewards_per_client": ys_h["rewards_per_client"][r],
+                "dispatches": per_round_dispatches,
+                "up_nbytes": [up_static] * p,
+                "down_nbytes": down_static,
+                "local_steps": [cfc.local_steps] * p,
+                "cohorts": 1,
+                "fused": rounds,
+            }
+            out.append(summary)
+            self.history.append(summary)
+        return out
 
     # ------------------------------------------------- per-client loop path
     def _local_phase_loop(self, fc: FIRMConfig, participants: List[int],
@@ -696,8 +1056,12 @@ class FederatedTrainer:
                              pref, lin_w)
             self.jit_dispatches += 1
             lams = ms["lam"][-1]                              # (C, M)
-            rewards_mean = ms["rewards"].reshape(-1, m).mean(0)
-            kl_mean = ms["kl"].mean()
+            # one axis at a time: a flat (K*C) mean is emitted as a
+            # multi-dim reduce whose association differs between this
+            # eager context and the fused round scan; staged means are
+            # context-stable, keeping the two paths bit-identical
+            rewards_mean = ms["rewards"].mean(0).mean(0)
+            kl_mean = ms["kl"].mean(0).mean(0)
             rewards_pc = ms["rewards"].mean(0)                # (C, M)
 
         new_states = _jit_unstack(p_count)(stacked)
@@ -761,9 +1125,14 @@ class FederatedTrainer:
     def _vec_fedcmoo_steps(self, cfc: FIRMConfig, participants: List[int],
                            stacked, seeds, counts0, probs, band_h, band_x):
         """FedCMOO vectorized local phase: two jitted dispatches per step
-        (vmapped grads, vmapped apply) around the host-side server
-        exchange — per-client codec Payloads + one global λ solve."""
+        (vmapped grads, vmapped apply) around the batched server
+        exchange.  The exchange itself is fully vectorized since PR 4:
+        all C×M gradient trees flatten in one batched tree op, the codec
+        encodes them at the stacked Payload boundary (one kernel dispatch
+        for quantize codecs), and the stacked decode feeds the λ solve
+        directly — no per-client host loop remains."""
         m = cfc.n_objectives
+        p_count = len(participants)
         grad_codec = self._grad_codec()
         grads_fn = _jit_vec_fedcmoo_grads(self.cfg, cfc, self.ec.max_new,
                                           self._length_tol)
@@ -777,24 +1146,24 @@ class FederatedTrainer:
             kb, kg = [], []
             for _ in participants:
                 kb.append(self._next_key())
-                kg.append([self._next_key() for _ in range(m)])
+                kg.extend(self._next_key() for _ in range(m))
             prompts = sampler(seeds, counts0 + k, probs)
             self.jit_dispatches += 1
             grads, extras, rmean = grads_fn(
                 stacked, self.frozen, self.ref_params, prompts,
                 jnp.stack(kb), band_h, band_x)
             self.jit_dispatches += 1
-            server_grads = []
-            for ci in range(len(participants)):
-                received = []
-                for j in range(m):
-                    g_c = jax.tree_util.tree_map(lambda x: x[ci], grads[j])
-                    gp, _, dec = grad_codec.roundtrip(g_c, key=kg[ci][j])
-                    self.ledger.send_up(gp)
-                    received.append(dec)
-                server_grads.append(received)
-            lam = fedcmoo.fedcmoo_round_lambda(
-                server_grads,
+            # (C, M, d) client-major rows match the loop path's upload
+            # order, so payload keys and ledger bytes are identical
+            gmat = _jit_grads_flat(m)(grads)
+            self.jit_dispatches += 1
+            gpayloads, _, gdec = grad_codec.roundtrip_stacked(
+                gmat.reshape(p_count * m, -1), self._delta_spec,
+                keys=kg)
+            for gp in gpayloads:
+                self.ledger.send_up(gp)
+            lam = fedcmoo.fedcmoo_round_lambda_stacked(
+                gdec.reshape(p_count, m, -1),
                 compress_rank=self.ec.fedcmoo_compress_rank,
                 key=self._next_key())
             stacked, metrics = apply_fn(stacked, grads, lam, extras)
@@ -808,6 +1177,18 @@ class FederatedTrainer:
         return lam_last, rewards_mean, kl_mean, rewards_pc, stacked
 
     def run(self, rounds: Optional[int] = None) -> List[dict]:
-        for _ in range(rounds or self.fc.rounds):
-            self.run_round()
+        total = rounds or self.fc.rounds
+        chunk = max(1, int(self.ec.fused_rounds))
+        if chunk > 1 and self._fused_mode()[0]:
+            left = total
+            while left > 0:
+                r = min(chunk, left)
+                if r == 1:
+                    self.run_round()
+                else:
+                    self.run_rounds_fused(r)
+                left -= r
+        else:
+            for _ in range(total):
+                self.run_round()
         return self.history

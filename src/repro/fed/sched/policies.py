@@ -63,15 +63,32 @@ def client_round_seconds(profile, down_nbytes: float, up_nbytes: float,
 
 class SyncPolicy:
     """Synchronous barrier: the bare engine round + a max-over-clients
-    clock advance.  Bit-identical results to ``FederatedTrainer``."""
+    clock advance.  Bit-identical results to ``FederatedTrainer``.
+
+    When the trainer is configured with ``EngineConfig.fused_rounds > 1``
+    (and the fused program applies), the whole horizon runs through
+    ``FederatedTrainer.run`` — R rounds per dispatch — and the clock
+    annotations are applied per summary afterwards.  The fused path's
+    static codec bytes equal the measured payload bytes, so simulated
+    durations (and everything derived from them) are unchanged.  The
+    deadline/fedbuff policies stay on the per-round engine: their
+    control flow consults the clock between dispatches.
+    """
 
     name = "sync"
 
     def run(self, st: "ScheduledTrainer", rounds: int) -> List[dict]:
+        tr = st.trainer
+        if tr.ec.fused_rounds > 1 and tr._fused_mode()[0]:
+            start = len(tr.history)
+            tr.run(rounds)
+            return [self._annotate(st, s) for s in tr.history[start:]]
         return [self.step(st) for _ in range(rounds)]
 
     def step(self, st: "ScheduledTrainer") -> dict:
-        s = st.trainer.run_round()
+        return self._annotate(st, st.trainer.run_round())
+
+    def _annotate(self, st: "ScheduledTrainer", s: dict) -> dict:
         durs = [st.client_seconds(c, s["down_nbytes"], s["up_nbytes"][i],
                                   s["local_steps"][i])
                 for i, c in enumerate(s["participants"])]
