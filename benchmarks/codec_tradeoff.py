@@ -35,6 +35,11 @@ def _sweep_cell(algorithm: str, codec: str, rounds: int = ROUNDS):
         "rewards": np.asarray(last["rewards"]).tolist(),
         "up_bytes": int(last["up_bytes"]),
         "down_bytes": int(last["down_bytes"]),
+        # the ExecutionPlan predicted these wire bytes BEFORE any
+        # compilation (nbytes_static); the ledger must agree exactly
+        "plan_up_bytes_per_round": int(tr.plan.up_bytes_per_round),
+        "plan_matches_measured": bool(
+            tr.plan.up_bytes_per_round * rounds == int(last["up_bytes"])),
     }
 
 

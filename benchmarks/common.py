@@ -2,6 +2,12 @@
 
 Every benchmark emits ``name,us_per_call,derived`` CSV rows (derived is a
 compact json-ish summary of the paper-relevant quantities).
+
+Trainers are built through the declarative front door
+(``repro.fed.api``: RunSpec -> plan() -> build()), so every benchmark
+cell runs exactly the executor the plan resolves — identical numbers to
+direct ``FederatedTrainer`` construction (``tests/test_plan.py`` pins
+this), with the plan available for inspection via ``trainer.plan``.
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import FIRMConfig
-from repro.fed.engine import EngineConfig, FederatedTrainer
+from repro.fed import api
+from repro.fed.api import EngineConfig, RunSpec
 
 
 def row(name: str, us_per_call: float, derived: dict) -> str:
@@ -26,12 +33,12 @@ def tiny_cfg(n_layers=2, d_model=64, vocab=256):
                                               d_model=d_model, vocab=vocab)
 
 
-def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
-                 local_steps=1, batch=2, preference=None, seed=0,
-                 heterogeneous_rms=False, dirichlet_alpha=0.3,
-                 uplink_codec="identity", downlink_codec="identity",
-                 vectorized=True, fused_rounds=1,
-                 cfg=None) -> FederatedTrainer:
+def make_spec(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
+              local_steps=1, batch=2, preference=None, seed=0,
+              heterogeneous_rms=False, dirichlet_alpha=0.3,
+              uplink_codec="identity", downlink_codec="identity",
+              vectorized=True, fused_rounds=1, sched=None,
+              cfg=None) -> RunSpec:
     cfg = cfg or tiny_cfg()
     fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
                     local_steps=local_steps, batch_size=batch, beta=beta,
@@ -43,7 +50,17 @@ def make_trainer(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
                       downlink_codec=downlink_codec,
                       vectorized_clients=vectorized,
                       fused_rounds=fused_rounds)
-    return FederatedTrainer(cfg, fc, ec)
+    return RunSpec(model=cfg, firm=fc, engine=ec, sched=sched)
+
+
+def make_trainer(algorithm="firm", **kw):
+    """RunSpec -> plan -> trainer.
+
+    Returns a ``FederatedTrainer`` (or a ``ScheduledTrainer`` when
+    ``sched=`` names a SchedConfig); the resolved ExecutionPlan rides
+    along as ``.plan`` on the underlying trainer.
+    """
+    return api.plan(make_spec(algorithm, **kw)).build()
 
 
 def timed_rounds(trainer, rounds: int):

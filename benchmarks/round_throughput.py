@@ -40,12 +40,17 @@ def _measure(vectorized: bool, n_clients: int) -> dict:
     tr = make_trainer("firm", n_clients=n_clients, m=2,
                       local_steps=LOCAL_STEPS, batch=BATCH,
                       vectorized=vectorized)
+    # the RunSpec front door resolved the executor this cell claims to
+    # measure — a silent fallback would corrupt the benchmark
+    want = "vectorized" if vectorized else "loop"
+    assert tr.plan.executor == want, (tr.plan.executor, want)
     tr.run(1)                                   # compile/warmup round
     d0 = tr.jit_dispatches
     t0 = time.perf_counter()
     tr.run(TIMED_ROUNDS)
     dt = time.perf_counter() - t0
     return {
+        "executor": tr.plan.executor,
         "rounds_per_sec": TIMED_ROUNDS / dt,
         "us_per_round": dt / TIMED_ROUNDS * 1e6,
         "dispatches_per_round": (tr.jit_dispatches - d0) / TIMED_ROUNDS,
@@ -56,6 +61,7 @@ def _measure_fused(n_clients: int, r: int = FUSED_R) -> dict:
     tr = make_trainer("firm", n_clients=n_clients, m=2,
                       local_steps=LOCAL_STEPS, batch=BATCH,
                       fused_rounds=r)
+    assert tr.plan.executor == "fused", tr.plan.executor
     tr.run(r)                                   # compile/warmup chunk
     d0 = tr.jit_dispatches
     t0 = time.perf_counter()
@@ -63,6 +69,7 @@ def _measure_fused(n_clients: int, r: int = FUSED_R) -> dict:
     dt = time.perf_counter() - t0
     rounds = r * FUSED_CHUNKS
     return {
+        "executor": tr.plan.executor,
         "rounds": r,
         "rounds_per_sec": rounds / dt,
         "us_per_round": dt / rounds * 1e6,

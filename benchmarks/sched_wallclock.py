@@ -24,7 +24,6 @@ import numpy as np
 
 from benchmarks.common import make_trainer, row
 from repro.configs.base import SchedConfig
-from repro.fed.sched.policies import ScheduledTrainer
 
 POLICIES = ("sync", "deadline", "fedbuff")
 CODECS = ("identity", "int8+ef")
@@ -46,9 +45,10 @@ def _sched_config(policy: str, preset: str) -> SchedConfig:
 
 
 def _cell(policy: str, codec: str, preset: str) -> dict:
-    tr = make_trainer("firm", beta=0.05, n_clients=N_CLIENTS,
-                      local_steps=1, batch=2, uplink_codec=codec)
-    st = ScheduledTrainer(tr, _sched_config(policy, preset))
+    # RunSpec front door: sched= returns the ScheduledTrainer directly
+    st = make_trainer("firm", beta=0.05, n_clients=N_CLIENTS,
+                      local_steps=1, batch=2, uplink_codec=codec,
+                      sched=_sched_config(policy, preset))
     hist = st.run(ROUNDS)
     last = hist[-1]
     sim_time = float(last["sim_time"])

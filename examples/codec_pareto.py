@@ -5,14 +5,21 @@ profile in ``configs.base.CODEC_PRESETS`` and prints the measured wire
 bytes next to the attained rewards — the operating-point menu a
 bandwidth-constrained federated deployment picks from.
 
+Uses the declarative front door (``repro.fed.api``): each profile is a
+``RunSpec``, ``plan()`` resolves the executor and predicts the exact
+wire bytes BEFORE anything compiles (the "plan/round" line), and
+``execute`` runs it — the predicted bytes match the measured ledger
+exactly because every codec's ``nbytes_static`` equals its measured
+``Payload.nbytes``.
+
   PYTHONPATH=src python examples/codec_pareto.py
 """
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import CODEC_PRESETS, FIRMConfig
-from repro.core import comms as comms_lib
-from repro.fed.engine import EngineConfig, FederatedTrainer
+from repro.fed import api
+from repro.fed.api import EngineConfig, RunSpec
 
 
 def main():
@@ -25,21 +32,25 @@ def main():
           f"{'up_KB':>7} {'down_KB':>8} {'ratio':>6}  rewards")
     base_up = None
     for profile, (up, down) in CODEC_PRESETS.items():
-        ec = EngineConfig(max_new=6, prompt_len=4, uplink_codec=up,
-                          downlink_codec=down)
-        tr = FederatedTrainer(cfg, fc, ec)
-        s = tr.run(rounds)[-1]
+        spec = RunSpec(
+            model=cfg, firm=fc,
+            engine=EngineConfig(max_new=6, prompt_len=4, uplink_codec=up,
+                                downlink_codec=down),
+            rounds=rounds)
+        plan = api.plan(spec)
+        s = plan.execute()[-1]
         if base_up is None:
             base_up = s["up_bytes"]
         print(f"{profile:<10} {up:<14} {down:<9} "
               f"{s['up_bytes'] / 1e3:>7.1f} {s['down_bytes'] / 1e3:>8.1f} "
               f"{s['up_bytes'] / base_up:>6.2f}  "
               f"{np.round(s['rewards'], 3).tolist()}")
-        analytic = comms_lib.firm_round_bytes_codec(
-            tr.d_trainable, fc.n_clients, uplink_codec=up,
-            downlink_codec=down)
-        print(f"{'':<10} analytic/round: up {analytic['up'] / 1e3:.1f}KB "
-              f"down {analytic['down'] / 1e3:.1f}KB")
+        print(f"{'':<10} plan/round ({plan.executor}): "
+              f"up {plan.up_bytes_per_round / 1e3:.1f}KB "
+              f"down {plan.down_bytes_per_round / 1e3:.1f}KB"
+              + ("  [matches measured]"
+                 if plan.up_bytes_per_round * rounds == s["up_bytes"]
+                 else "  [MISMATCH]"))
     print("\nuplink ratio < 0.30 for every coded profile — the O(Cd) "
           "claim survives an actual wire format (see ISSUE acceptance).")
 

@@ -1,0 +1,28 @@
+"""Regenerate tests/golden_plans.json from the test_plan config matrix.
+
+  PYTHONPATH=src python scripts/update_golden_plans.py
+
+Review the diff before committing: the golden file is the fast-lane
+guard against silent executor regressions (a config quietly falling
+back to the per-client loop shows up as an `executor` change here).
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.fed import api                       # noqa: E402
+from tests.test_plan import GOLDEN, golden_matrix   # noqa: E402
+
+
+def main():
+    summaries = {name: api.plan(spec).summary()
+                 for name, spec in golden_matrix().items()}
+    GOLDEN.write_text(json.dumps(summaries, indent=2, sort_keys=True)
+                      + "\n")
+    print(f"wrote {GOLDEN} ({len(summaries)} plans)")
+
+
+if __name__ == "__main__":
+    main()

@@ -171,6 +171,17 @@ class Codec:
         """
         raise NotImplementedError
 
+    def meta_static(self, d: int) -> Dict[str, Any]:
+        """The ``encode_flat`` meta dict for a d-element flat vector.
+
+        Shipped codecs' meta is a pure function of d and the codec
+        params (like ``nbytes_static``), which lets ``ErrorFeedback``
+        rebuild exact Payloads from in-graph encode outputs without a
+        second host-side encode.  Codecs whose ``encode_flat`` attaches
+        meta must override this to match it.
+        """
+        return {}
+
     def _flat_payload(self, flat: jnp.ndarray, spec: "TreeSpec", *,
                       key=None) -> Payload:
         arrays, meta = self.encode_flat(flat, key=key)
@@ -297,6 +308,21 @@ class Codec:
         payload = self._flat_payload(flat, None, key=key)
         return self.decode_flat(payload)[:flat.size], state
 
+    def encode_decode_traced(self, flat: jnp.ndarray, *, key=None):
+        """In-graph encode + decode that ALSO returns the wire buffers.
+
+        Returns (payload arrays, decoded) with the exact barrier
+        placement of ``roundtrip_traced`` — the decoded value is
+        bit-identical to it — plus the payload's array dict as graph
+        outputs, so a caller under jit can materialize the wire bytes
+        from the SAME encode that produced the decode (the single-encode
+        uplink: see ``ErrorFeedback.roundtrip_flat``).
+        """
+        payload = self._flat_payload(jax.lax.optimization_barrier(flat),
+                                     None, key=key)
+        decoded = self.decode_flat(payload)[:flat.size]
+        return payload.arrays, jax.lax.optimization_barrier(decoded)
+
     def roundtrip_traced_stacked(self, flats: jnp.ndarray, states=(), *,
                                  keys=None):
         """``roundtrip_traced`` over the stacked (C, d) client axis.
@@ -312,6 +338,32 @@ class Codec:
         decoded, states = jax.vmap(one)(
             jax.lax.optimization_barrier(flats), keys, states)
         return jax.lax.optimization_barrier(decoded), states
+
+    def encode_decode_traced_stacked(self, flats: jnp.ndarray, *,
+                                     keys=None):
+        """``encode_decode_traced`` over the stacked (C, d) client axis.
+
+        Returns (payload arrays with a leading (C,) axis, (C, d)
+        decoded); decoded rows are bit-identical to
+        ``roundtrip_traced_stacked``'s.  ``keys`` must be a per-client
+        key array (callers with None keys take the per-row host path).
+        """
+        def one(f, k):
+            payload = self._flat_payload(f, None, key=k)
+            return payload.arrays, self.decode_flat(payload)[:f.size]
+        arrays, decoded = jax.vmap(one)(
+            jax.lax.optimization_barrier(flats), keys)
+        return arrays, jax.lax.optimization_barrier(decoded)
+
+    def stacked_payloads_from_arrays(self, arrays, c: int, spec: "TreeSpec",
+                                     d: int):
+        """Per-client Payloads from ``encode_decode_traced_stacked``'s
+        array outputs (leading (C,) axis layout; batch-shaped codecs
+        override to slice their concatenated-row layout)."""
+        meta = self.meta_static(d)
+        return [Payload(self.name, {k: v[i] for k, v in arrays.items()},
+                        {**meta, "spec": spec, "d": d})
+                for i in range(c)]
 
 
 class IdentityCodec(Codec):
@@ -338,15 +390,18 @@ class ErrorFeedback(Codec):
     state is the client-local residual flat vector (starts at zero);
     decode is the inner codec's (the server never sees the residual).
 
-    The decode + residual update runs inside ONE jitted program (the
-    traced roundtrip), for two reasons: it is one dispatch instead of a
-    chain of eager ops, and — decisively — XLA CPU contracts the
-    dequantize multiply into the residual subtract (an fms) whenever
-    both sit in the same program, which no barrier prevents.  Computing
-    the residual the same way on the host boundary and inside the fused
-    round scan keeps the two engines bit-identical.  Payload buffers
-    still come from the eager inner encode (deterministic given the same
-    adjusted input, so they match the jitted decode's codes exactly).
+    The whole uplink — residual add, inner encode, decode, residual
+    update — runs inside ONE jitted program, for three reasons: it is
+    one dispatch instead of a chain of eager ops; each uplink encodes
+    exactly ONCE (the payload's wire buffers are outputs of the same
+    in-graph encode that produced the decode — no eager re-encode); and
+    — decisively — XLA CPU contracts the dequantize multiply into the
+    residual subtract (an fms) whenever both sit in the same program,
+    which no barrier prevents.  Computing the residual the same way on
+    the host boundary and inside the fused round scan keeps the two
+    engines bit-identical.  Payloads are rebuilt host-side from the
+    returned arrays + the inner codec's static meta
+    (``Codec.meta_static``), byte-identical to an eager encode.
     """
 
     stateful = True
@@ -361,15 +416,21 @@ class ErrorFeedback(Codec):
     # every client of a trainer, so each trainer compiles these once)
     def _jit_rt_flat(self):
         if self._rt_flat_jit is None:
-            self._rt_flat_jit = jax.jit(
-                lambda f, s, k: self.roundtrip_traced(f, s, key=k))
+            def fn(f, s, k):
+                adj = f + s
+                arrays, dec = self.inner.encode_decode_traced(adj, key=k)
+                return arrays, dec, adj - dec
+            self._rt_flat_jit = jax.jit(fn)
         return self._rt_flat_jit
 
     def _jit_rt_stacked(self):
         if self._rt_stacked_jit is None:
-            self._rt_stacked_jit = jax.jit(
-                lambda f, s, k: self.roundtrip_traced_stacked(f, s,
-                                                              keys=k))
+            def fn(f, s, k):
+                adj = f + s
+                arrays, dec = self.inner.encode_decode_traced_stacked(
+                    adj, keys=k)
+                return arrays, dec, adj - dec
+            self._rt_stacked_jit = jax.jit(fn)
         return self._rt_stacked_jit
 
     def encode(self, tree, state=None, *, key=None):
@@ -386,9 +447,11 @@ class ErrorFeedback(Codec):
 
     def roundtrip_flat(self, flat, spec, state=None, *, key=None):
         st = jnp.zeros_like(flat) if state is None else state
-        adj = flat if state is None else flat + state
-        payload = self.inner._flat_payload(adj, spec, key=key)
-        decoded, residual = self._jit_rt_flat()(flat, st, key)
+        arrays, decoded, residual = self._jit_rt_flat()(flat, st, key)
+        d = int(flat.size)
+        payload = Payload(self.inner.name, dict(arrays),
+                          {**self.inner.meta_static(d),
+                           "spec": spec, "d": d})
         return payload, residual, decoded
 
     def roundtrip_stacked(self, flats, spec, states=None, *, keys=None):
@@ -407,11 +470,10 @@ class ErrorFeedback(Codec):
                                              keys=keys)
         sts = jnp.stack([jnp.zeros_like(flats[i]) if s is None else s
                          for i, s in enumerate(states)])
-        adj = jnp.stack([flats[i] if states[i] is None
-                         else flats[i] + states[i] for i in range(c)])
-        payloads, _ = self.inner.encode_stacked(adj, spec, keys=keys)
-        decoded, residual = self._jit_rt_stacked()(flats, sts,
-                                                   jnp.stack(keys))
+        arrays, decoded, residual = self._jit_rt_stacked()(flats, sts,
+                                                           jnp.stack(keys))
+        payloads = self.inner.stacked_payloads_from_arrays(
+            arrays, c, spec, int(flats.shape[1]))
         return payloads, [residual[i] for i in range(c)], decoded
 
     def encode_stacked(self, flats, spec, states=None, *, keys=None):
@@ -462,6 +524,9 @@ class ErrorFeedback(Codec):
 
     def nbytes_static(self, d: int) -> int:
         return self.inner.nbytes_static(d)
+
+    def meta_static(self, d: int):
+        return self.inner.meta_static(d)
 
 
 class DeltaCodec(Codec):
@@ -569,3 +634,6 @@ class DeltaCodec(Codec):
 
     def nbytes_static(self, d: int) -> int:
         return self.inner.nbytes_static(d)
+
+    def meta_static(self, d: int):
+        return self.inner.meta_static(d)

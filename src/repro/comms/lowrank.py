@@ -60,3 +60,7 @@ class LowRankCodec(Codec):
     def nbytes_static(self, d: int) -> int:
         a, b = _matrix_shape(d)
         return 4 * self.rank * (a + b)
+
+    def meta_static(self, d: int):
+        a, b = _matrix_shape(d)
+        return {"a": a, "b_cols": b}

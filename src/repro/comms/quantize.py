@@ -86,6 +86,9 @@ class QuantizeCodec(Codec):
         code_bytes = rows * (BLOCK if self.bits == 8 else BLOCK // 2)
         return code_bytes + rows * 4
 
+    def meta_static(self, d: int):
+        return {"bits": self.bits}
+
     # -- stacked-client batched path ------------------------------------
     def _quantize_stacked(self, flats, keys):
         """(C, d) -> one kernel dispatch over the concatenated blocks.
@@ -143,14 +146,16 @@ class QuantizeCodec(Codec):
                 decoded)
 
     # -- traced in-graph path -------------------------------------------
-    def roundtrip_traced_stacked(self, flats, states=(), *, keys=None):
+    def encode_decode_traced_stacked(self, flats, *, keys=None):
         """Same batched quantize/dequantize as ``roundtrip_stacked`` with
-        the codes/scales as graph intermediates — ONE kernel dispatch
-        over all C clients' blocks, bit-identical rows to per-client
-        ``roundtrip_traced`` calls.  ``keys`` is a (C, 2) key array (the
-        fused engine always supplies per-client keys).  The wire
-        boundary is marked with (best-effort) optimization barriers —
-        see ``Codec.roundtrip_traced`` for what they do and do not
+        codes/scales staged in-graph — ONE kernel dispatch over all C
+        clients' blocks, bit-identical rows to per-client
+        ``roundtrip_traced`` calls — and the wire buffers (int4 packed)
+        returned alongside the decode, in the concatenated-row layout
+        ``stacked_payloads_from_arrays`` slices.  ``keys`` is a (C, 2)
+        key array (stacked callers always supply per-client keys).  The
+        wire boundary is marked with (best-effort) optimization barriers
+        — see ``Codec.roundtrip_traced`` for what they do and do not
         guarantee."""
         flats = jax.lax.optimization_barrier(flats)
         c, d = flats.shape
@@ -170,4 +175,22 @@ class QuantizeCodec(Codec):
         decoded = ops.dequantize(codes, scales, use_pallas=self.use_pallas)
         decoded = jax.lax.optimization_barrier(
             decoded.reshape(c, rows * BLOCK)[:, :d])
+        wire = pack_int4(codes) if self.bits == 4 else codes
+        return {"codes": wire, "scales": scales}, decoded
+
+    def roundtrip_traced_stacked(self, flats, states=(), *, keys=None):
+        """Decode-only view of ``encode_decode_traced_stacked`` (the
+        unused wire buffers are dead code the compiler drops)."""
+        _, decoded = self.encode_decode_traced_stacked(flats, keys=keys)
         return decoded, states
+
+    def stacked_payloads_from_arrays(self, arrays, c, spec, d):
+        """Slice the concatenated-row codes/scales into per-client
+        Payloads — identical layout (and bytes) to per-client encodes."""
+        rows = -(-d // BLOCK)
+        meta = self.meta_static(d)
+        return [Payload(
+            self.name,
+            {"codes": arrays["codes"][i * rows:(i + 1) * rows],
+             "scales": arrays["scales"][i * rows:(i + 1) * rows]},
+            {**meta, "spec": spec, "d": d}) for i in range(c)]

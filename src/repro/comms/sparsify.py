@@ -65,3 +65,6 @@ class TopKCodec(Codec):
     def nbytes_static(self, d: int) -> int:
         # k (int32 index, f32 value) pairs; k depends on d alone
         return 8 * max(1, int(round(self.frac * d)))
+
+    def meta_static(self, d: int):
+        return {"k": max(1, int(round(self.frac * d)))}

@@ -65,6 +65,21 @@ def fedcmoo_round_lambda(per_client_grads: Sequence[Sequence],
     return server_solve(mats, **solve_kw)
 
 
+def stack_grads_flat(grads: Sequence, m: int) -> jnp.ndarray:
+    """M stacked gradient trees (leading (C,) axis) -> (C, M, d) f32.
+
+    Row (c, j) is bit-identical to ``flatten_grads`` applied to client
+    c's j-th gradient tree — the batched form of the server exchange's
+    per-client flatten, so the stacked codec boundary can encode all
+    C x M gradient uploads in one dispatch.
+    """
+    mats = [jnp.concatenate(
+        [l.astype(jnp.float32).reshape(l.shape[0], -1)
+         for l in jax.tree_util.tree_leaves(grads[j])], axis=1)
+        for j in range(m)]
+    return jnp.stack(mats, axis=1)
+
+
 def fedcmoo_round_lambda_stacked(stacked: jnp.ndarray,
                                  compress_rank: Optional[int] = None,
                                  key=None, **solve_kw) -> jnp.ndarray:

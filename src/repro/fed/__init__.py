@@ -1,4 +1,14 @@
-from repro.fed.engine import EngineConfig, FederatedTrainer  # noqa
+from repro.fed.algorithms import (Algorithm, Capabilities,  # noqa
+                                  available_algorithms, get_algorithm,
+                                  register_algorithm)
+from repro.fed.api import (EngineConfig, ExecutionPlan, RunSpec,  # noqa
+                           execute, plan)
+from repro.fed.engine import FederatedTrainer  # noqa
 from repro.fed.sched.policies import ScheduledTrainer  # noqa
 
-__all__ = ["FederatedTrainer", "EngineConfig", "ScheduledTrainer"]
+__all__ = [
+    "FederatedTrainer", "EngineConfig", "ScheduledTrainer",
+    "RunSpec", "ExecutionPlan", "plan", "execute",
+    "Algorithm", "Capabilities", "available_algorithms", "get_algorithm",
+    "register_algorithm",
+]

@@ -2,13 +2,15 @@
 
 Simulates the server + C clients protocol end-to-end at laptop scale:
 generation with the current local policy, synthetic reward scoring, the
-FIRM (or baseline) local update, FedAvg aggregation, and full metric /
-communication accounting.  Algorithms:
-
-  'firm'       — paper Alg. 1 (in-client regularized MGDA)
-  'firm_unreg' — β = 0 ablation (RQ2)
-  'fedcmoo'    — server-centric MGDA baseline (RQ1, Askin et al. 2024)
-  'linear'     — fixed-weight linear scalarization (implicit baseline)
+local update, FedAvg aggregation, and full metric / communication
+accounting.  WHICH update runs is owned by the ``Algorithm`` objects in
+``repro.fed.algorithms`` (paper Alg. 1, its β = 0 ablation, linear
+scalarization, the server-centric MGDA baseline, and anything else the
+registry holds) — this module contains no algorithm-name dispatch at
+all: every path decision is a CAPABILITY query (``Algorithm.caps``)
+resolved through ``repro.fed.api``, and the declarative front door
+(``RunSpec -> plan() -> ExecutionPlan``) exposes the same decisions
+for inspection before anything compiles.
 
 All uplink/downlink traffic flows through the repro.comms codec layer
 (EngineConfig.uplink_codec / downlink_codec registry specs): clients
@@ -31,21 +33,22 @@ Two interchangeable local-phase paths:
   device-resident and transfer to host once per round.  The client→server
   delta and FedAvg are single batched tree ops over the stacked axis.
 * **per-client loop**: the original Python loop (C × K dispatches), kept
-  for equivalence testing and as the fallback when per-client configs
-  diverge statically.
+  for equivalence testing and as the capability fallback.
 
-vmap groups clients by IDENTICAL static config, and since PR 3 that
-grouping is a *cohort plan* (repro.fed.sched.cohort) instead of an
-all-or-nothing fallback: participants partition into groups with equal
+vmap groups clients by IDENTICAL static config via a *cohort plan*
+(repro.fed.sched.cohort): participants partition into groups with equal
 static ``FIRMConfig`` (preference lifted to a traced (C, M) array when
 ``client_preferences`` is set), and each cohort runs as one vmapped
 program — e.g. heterogeneous per-client ``client_local_steps``
 (FedMOA-style rates) costs one dispatch per distinct K.  Generation
 keys are drawn in the canonical loop order (step-major over all
 participants) and sliced per cohort, so multi-cohort rounds stay
-equivalent to the per-client loop.  fedcmoo still requires a single
-cohort (its λ exchange is global per local step) and falls back to the
-loop otherwise.  The uplink codec runs at a *stacked* Payload boundary
+equivalent to the per-client loop.  Algorithms declaring
+``single_cohort_required`` (a lock-step per-step server exchange) fall
+back to the loop when configs diverge; algorithms whose server exchange
+is host-driven (``traced_server_exchange=False``) route the vectorized
+phase through their own ``exchange_phase_vectorized`` hook.  The uplink
+codec runs at a *stacked* Payload boundary
 (``Codec.roundtrip_stacked``): quantize codecs encode all C client
 deltas in one batched kernel dispatch, byte-identical to per-client
 encodes.
@@ -56,8 +59,8 @@ consumed — so the scheduler subsystem's deadline over-selection and
 dropout (repro.fed.sched) reproduce the same client draws across
 policies.
 
-Fused multi-round execution (PR 4)
-----------------------------------
+Fused multi-round execution
+---------------------------
 ``EngineConfig.fused_rounds = R`` lifts the WHOLE round — participation
 fold-in, downlink broadcast, the vectorized local phase, delta
 extraction, the stacked uplink roundtrip, and the FedAvg aggregate —
@@ -73,44 +76,36 @@ sequence exactly, and the error-feedback residual is computed in the
 same jitted composition on both paths (XLA contracts the dequantize
 multiply into the residual subtract; doing it identically everywhere is
 what keeps the trajectories exact).  ``run()`` chunks the horizon by R
-and falls back to per-round execution for fedcmoo (host-driven λ
-exchange), multi-cohort configs, and the deadline/fedbuff schedulers;
-the ``sync`` scheduler policy rides the fused path unchanged.
+when ``api.resolve_fused`` grants it — the algorithm declares
+``fusable`` (which requires a traced server exchange), the population
+forms one cohort, and both codecs support the traced contract — and
+falls back to per-round execution otherwise; the ``sync`` scheduler
+policy rides the fused path unchanged while the deadline/fedbuff
+policies are host-driven between dispatches and stay per-round.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 from functools import partial
-from typing import List, NamedTuple, Optional, Sequence
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.comms import ErrorFeedback, make_codec
+from repro.comms import make_codec
 from repro.comms import codec as codec_lib
 from repro.configs.base import FIRMConfig, ModelConfig
-from repro.core import comms, drift, fedavg, fedcmoo
+from repro.core import comms, drift, fedavg
 from repro.data.partition import make_client_datasets, sample_prompt_block
-from repro.fed.sched.cohort import build_cohorts
+from repro.fed import api as api_lib
+from repro.fed.algorithms import client_configs, get_algorithm
+from repro.fed.api import EngineConfig  # noqa: F401  (canonical home is api)
 from repro.models import transformer
 from repro.models.common import merge_trainable, split_trainable, tree_size
 from repro.rlhf import local as local_lib
 from repro.rlhf import ppo, rewards as rewards_lib
 from repro.rlhf.sampling import generate
-
-
-# Jitted callables are memoized on the (hashable, frozen) configs so every
-# trainer with the same architecture + FIRM hyperparameters shares one
-# trace/compile per process — the test suite and benchmark sweeps build
-# dozens of identically-configured trainers.
-@functools.lru_cache(maxsize=None)
-def _jit_local_step(cfg: ModelConfig, cfc: FIRMConfig):
-    # the client-state argument is donated: its buffers are reused for the
-    # updated state in place.  Callers must pass states whose buffers are
-    # not aliased elsewhere (the engine adopts the broadcast by copy).
-    return jax.jit(partial(local_lib.firm_local_step, cfg, cfc),
-                   donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -121,29 +116,27 @@ def _jit_ref_logprobs(cfg: ModelConfig):
     return jax.jit(ref_lp)
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_sample_block(batch_size: int, prompt_len: int, vocab: int):
-    return jax.jit(lambda seeds, counts, probs: sample_prompt_block(
-        seeds, counts, probs, batch_size, prompt_len, vocab))
-
-
-def _make_round_fn(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+def _make_round_fn(cfg: ModelConfig, cfc: FIRMConfig, kernel: str,
                    prompt_len: int, max_new: int, length_tol: int,
                    has_pref: bool):
     """One round's entire local phase as a pure function.
 
     vmap over the stacked client axis x lax.scan over the K local steps:
     sampling, generation, reward scoring, reference logprobs and the
-    local update all fuse into one program.  Jitted standalone by
-    ``_jit_vec_round`` (the per-round path) and inlined into the
-    round-level scan by ``_jit_fused_rounds``.
+    local update all fuse into one program.  ``kernel`` names the
+    Algorithm whose ``traced_step`` runs inside the vmap (algorithms
+    that lower to the same program share a kernel name and therefore a
+    compile).  Jitted standalone by ``_jit_vec_round`` (the per-round
+    path) and inlined into the round-level scan by
+    ``_jit_fused_rounds``.
     """
+    alg = get_algorithm(kernel)
     k_steps = cfc.local_steps
     m = cfc.n_objectives
     b = cfc.batch_size
 
     def round_fn(state, frozen, ref_params, seeds, counts0, probs,
-                 band_h, band_x, gen_keys, pref, lin_w):
+                 band_h, band_x, gen_keys, pref, extra):
 
         def one_client(st, prompts, key, bh, bx, p):
             params = merge_trainable(st.trainable, frozen)
@@ -154,11 +147,7 @@ def _make_round_fn(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
             ref_out = transformer.forward_seq(cfg, ref_params, tokens)
             ref_lp = ppo.token_logprobs(ref_out["logits"], tokens)
             batch = ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
-            if algorithm == "linear":
-                return local_lib.linear_local_step(cfg, cfc, st, frozen,
-                                                   batch, lin_w)
-            return local_lib.firm_local_step(cfg, cfc, st, frozen, batch,
-                                             preference=p)
+            return alg.traced_step(cfg, cfc, st, frozen, batch, p, extra)
 
         vstep = jax.vmap(one_client,
                          in_axes=(0, 0, 0, 0, 0, 0 if has_pref else None))
@@ -180,77 +169,19 @@ def _make_round_fn(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, kernel: str,
                    prompt_len: int, max_new: int, length_tol: int,
                    has_pref: bool):
     """The per-round dispatch of ``_make_round_fn`` (stacked state
     donated)."""
-    return jax.jit(_make_round_fn(cfg, cfc, algorithm, prompt_len,
+    return jax.jit(_make_round_fn(cfg, cfc, kernel, prompt_len,
                                   max_new, length_tol, has_pref),
                    donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_vec_fedcmoo_grads(cfg: ModelConfig, cfc: FIRMConfig, max_new: int,
-                           length_tol: int):
-    """FedCMOO client phase 1, vmapped: rollouts + M gradients for every
-    participant in one dispatch.  Gradients return stacked so the server
-    exchange (per-client codec Payloads + one λ solve) stays at the host
-    boundary between the two jitted phases."""
-    m = cfc.n_objectives
-
-    def fn(state, frozen, ref_params, prompts, keys, band_h, band_x):
-        def one(st, pr, key, bh, bx):
-            params = merge_trainable(st.trainable, frozen)
-            tokens, old_lp, mask = generate(cfg, params, pr, key,
-                                            max_new=max_new)
-            r = rewards_lib.score_batch_banded(bh, bx, tokens, mask, m,
-                                               length_tol)
-            ref_out = transformer.forward_seq(cfg, ref_params, tokens)
-            ref_lp = ppo.token_logprobs(ref_out["logits"], tokens)
-            batch = ppo.PPOBatch(tokens, mask, old_lp, ref_lp, r)
-            grads, losses, extras = local_lib.fedcmoo_local_grads(
-                cfg, cfc, st, frozen, batch)
-            return grads, extras, batch.rewards.mean(0)
-
-        return jax.vmap(one)(state, prompts, keys, band_h, band_x)
-
-    return jax.jit(fn)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_vec_fedcmoo_apply(cfc: FIRMConfig):
-    """FedCMOO client phase 2, vmapped, with the stacked state donated."""
-
-    def fn(state, grads, lam, extras):
-        def one(st, g, e):
-            return local_lib.fedcmoo_local_apply(cfc, st, g, lam, e)
-
-        return jax.vmap(one)(state, grads, extras)
-
-    return jax.jit(fn, donate_argnums=(0,))
-
-
-@functools.lru_cache(maxsize=None)
 def _jit_unstack(n: int):
     return jax.jit(lambda tree: tuple(fedavg.unstack_tree(tree, n)))
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_grads_flat(m: int):
-    """M stacked gradient trees (leading (C,) axis) -> (C, M, d) f32.
-
-    Row (c, j) is bit-identical to ``tree_to_flat`` of client c's j-th
-    gradient tree — the batched form of the fedcmoo server exchange's
-    per-client flatten."""
-
-    def fn(grads):
-        mats = [jnp.concatenate(
-            [l.astype(jnp.float32).reshape(l.shape[0], -1)
-             for l in jax.tree_util.tree_leaves(grads[j])], axis=1)
-            for j in range(m)]
-        return jnp.stack(mats, axis=1)
-    return jax.jit(fn)
 
 
 _stack_trees_jit = jax.jit(lambda *trees: fedavg.stack_trees(trees))
@@ -343,7 +274,7 @@ def _split_next(rng):
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
+def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, kernel: str,
                       prompt_len: int, max_new: int, length_tol: int,
                       has_pref: bool, uplink_spec: str, downlink_spec: str,
                       spec, n_clients: int, n_part: int):
@@ -359,7 +290,7 @@ def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
     stays out of this builder's cache key (jit specializes on the length
     of ``round_idxs``), so trailing partial chunks reuse the builder.
     """
-    round_fn = _make_round_fn(cfg, cfc, algorithm, prompt_len, max_new,
+    round_fn = _make_round_fn(cfg, cfc, kernel, prompt_len, max_new,
                               length_tol, has_pref)
     ul = make_codec(uplink_spec)
     dl = make_codec(downlink_spec)
@@ -368,7 +299,7 @@ def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
 
     def fused(carry, global_tr, round_idxs, part_base, frozen, ref_params,
               seeds_all, probs_all, band_h_all, band_x_all, pref_all,
-              lin_w):
+              extra):
 
         def body(c, round_idx):
             (states, g_tree, ul_state, dl_state, counts, rng) = c
@@ -420,7 +351,7 @@ def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
 
             new_part, ms = round_fn(part_states, frozen, ref_params,
                                     seeds, counts0, probs, band_h,
-                                    band_x, gen_keys, pref, lin_w)
+                                    band_x, gen_keys, pref, extra)
 
             flat_deltas = jnp.concatenate(
                 [(a - b).astype(jnp.float32).reshape(a.shape[0], -1)
@@ -479,40 +410,19 @@ def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, algorithm: str,
     return jax.jit(fused, donate_argnums=(0,))
 
 
-@dataclasses.dataclass
-class EngineConfig:
-    algorithm: str = "firm"
-    prompt_len: int = 8
-    max_new: int = 24
-    dirichlet_alpha: float = 0.3
-    seed: int = 0
-    heterogeneous_rms: bool = False      # half the clients use the alt RM
-    fedcmoo_compress_rank: Optional[int] = None
-    linear_weights: Optional[Sequence[float]] = None
-    # comms codecs (repro.comms registry specs, e.g. "int8+ef")
-    uplink_codec: str = "identity"       # client -> server deltas/grads
-    downlink_codec: str = "identity"     # server -> client broadcast
-    # run the round's local phase as one vmapped/scanned jit over the
-    # stacked client axis (falls back to the per-client loop when
-    # per-client static configs diverge; see module docstring)
-    vectorized_clients: bool = True
-    # fuse R federated rounds into ONE jitted program (round-level
-    # lax.scan with the traced codec contract): 1 = today's per-round
-    # dispatch; >1 amortizes Python dispatch and the per-round host
-    # transfer over R rounds.  Requires the single-cohort vectorized
-    # path (firm/firm_unreg/linear); run() falls back to per-round
-    # execution otherwise (fedcmoo's per-step server exchange and the
-    # deadline/fedbuff schedulers are inherently host-driven).
-    fused_rounds: int = 1
-
-
 class FederatedTrainer:
     def __init__(self, cfg: ModelConfig, fc: FIRMConfig,
-                 ec: Optional[EngineConfig] = None):
+                 ec: Optional[EngineConfig] = None,
+                 plan: Optional["api_lib.ExecutionPlan"] = None):
         # default must be constructed per instance: a shared EngineConfig
         # default would leak mutations across trainers
         ec = EngineConfig() if ec is None else ec
         self.cfg, self.fc, self.ec = cfg, fc, ec
+        # the Algorithm object owns the local-step machinery and the
+        # capability declaration every path decision queries; validate
+        # (fc, ec) against it before any expensive initialization
+        self.algorithm = get_algorithm(ec.algorithm)
+        self.algorithm.validate(fc, ec)
         key = jax.random.PRNGKey(ec.seed)
         self.params = transformer.init_params(cfg, key)
         trainable, frozen = split_trainable(self.params)
@@ -564,27 +474,14 @@ class FederatedTrainer:
         # named PRNG stream for participation sampling: keyed on
         # (seed, round index) only, never on how many keys the main
         # stream consumed — deadline over-selection and dropout in the
-        # scheduler reproduce the same draws across policies
+        # scheduler reproduce the same client draws across policies
         self._part_rng_base = jax.random.fold_in(
             jax.random.PRNGKey(ec.seed + 1), 0x5ced)
         self._round_idx = 0
-        # per-client FIRM configs (pluralistic preferences §6 future work,
-        # FedMOA-style heterogeneous local-step rates)
-        if fc.client_local_steps is not None and ec.algorithm == "fedcmoo":
-            raise ValueError("fedcmoo needs homogeneous local_steps: its "
-                             "server λ exchange is global per local step")
-        self._client_fcs = []
-        base_fc = self._fc_for_algorithm()
-        for c in range(fc.n_clients):
-            cfc = base_fc
-            if fc.client_preferences is not None:
-                cfc = dataclasses.replace(
-                    cfc, preference=fc.client_preferences[c])
-            if fc.client_local_steps is not None:
-                cfc = dataclasses.replace(
-                    cfc, local_steps=int(fc.client_local_steps[c]))
-            self._client_fcs.append(cfc)
-        self._jit_steps = [_jit_local_step(cfg, cfc)
+        # per-client configs expanded through the algorithm (pluralistic
+        # preferences, FedMOA-style heterogeneous local-step rates)
+        self._client_fcs = client_configs(self.algorithm, fc)
+        self._jit_steps = [self.algorithm.local_step_fn(cfg, cfc)
                            for cfc in self._client_fcs]
         self._jit_ref_lp = partial(_jit_ref_logprobs(cfg), self.ref_params)
         self._stacked_pref = (
@@ -595,13 +492,15 @@ class FederatedTrainer:
         # last round's uplink payloads (per-round path only; offline
         # payload analysis, e.g. entropy estimates in codec_tradeoff)
         self._last_up_payloads: List = []
+        # the declarative mirror of this trainer's path decisions; built
+        # through the same capability resolution the methods below use
+        self.plan = plan if plan is not None else api_lib.plan(
+            api_lib.RunSpec(model=cfg, firm=fc, engine=ec),
+            d_trainable=self.d_trainable)
 
     # ------------------------------------------------------------------
     def _fc_for_algorithm(self) -> FIRMConfig:
-        fc = self.fc
-        if self.ec.algorithm == "firm_unreg":
-            fc = dataclasses.replace(fc, beta=0.0)
-        return fc
+        return self.algorithm.resolve_config(self.fc)
 
     def _next_key(self):
         self._rng, k = jax.random.split(self._rng)
@@ -642,40 +541,17 @@ class FederatedTrainer:
                                 fc.n_clients, (n,), replace=False)
         return sorted(int(i) for i in idx)
 
-    def _grad_codec(self):
-        """Codec for per-step gradient uploads (fedcmoo/linear): error
-        feedback is defined per client *stream*, not per objective, so the
-        M parallel gradient trees use the EF-stripped inner codec."""
-        ul = self.uplink_codec
-        return ul.inner if isinstance(ul, ErrorFeedback) else ul
-
     def _local_phase_mode(self, participants: List[int]):
         """Pick the round's local-phase path: ("vec"|"cohort"|"loop", plan).
 
-        vmap groups clients by identical static config; the cohort plan
-        (repro.fed.sched.cohort) partitions participants accordingly.
-        One cohort -> the PR 2 single-dispatch path; several -> one
-        vmapped dispatch per cohort.  fedcmoo's per-step global λ
-        exchange needs every participant in lock-step, so it only runs
-        vectorized as a single cohort.
+        Pure capability resolution — see ``api.resolve_local_mode`` for
+        the rules (shared with the plan-time front door).
         """
-        if not self.ec.vectorized_clients:
-            return "loop", None
-        if self.ec.algorithm not in ("firm", "firm_unreg", "fedcmoo",
-                                     "linear"):
-            return "loop", None
-        has = [self._client_fcs[c].preference is not None
-               for c in participants]
-        if any(has) and not all(has):
-            return "loop", None           # mixed static/absent preference
-        plan = build_cohorts([(c, self._client_fcs[c])
-                              for c in participants],
-                             lift_preference=self._stacked_pref is not None)
-        if len(plan) == 1:
-            return "vec", plan
-        if self.ec.algorithm == "fedcmoo":
-            return "loop", None
-        return "cohort", plan
+        mode, plan, _ = api_lib.resolve_local_mode(
+            self.algorithm, self._client_fcs, participants,
+            vectorized_clients=self.ec.vectorized_clients,
+            lift_preference=self._stacked_pref is not None)
+        return mode, plan
 
     def _use_vectorized(self) -> bool:
         """Back-compat probe: does any vmapped path serve a full round?"""
@@ -683,21 +559,13 @@ class FederatedTrainer:
         return mode != "loop"
 
     def _fused_mode(self):
-        """(eligible, cohort cfc) for the fused multi-round program.
-
-        Fused rounds need every client on ONE vmapped cohort (any subset
-        of a homogeneous-config population is one cohort, so per-round
-        participation sampling stays safe), a client-local algorithm
-        (fedcmoo's per-step λ exchange is host-driven), and codecs that
-        support the traced contract.
-        """
-        if self.ec.algorithm not in ("firm", "firm_unreg", "linear"):
-            return False, None
+        """(eligible, cohort cfc) for the fused multi-round program —
+        ``api.resolve_fused`` over the full population's local mode."""
         mode, plan = self._local_phase_mode(list(range(self.fc.n_clients)))
-        if mode != "vec":
-            return False, None
-        if not (getattr(self.uplink_codec, "traceable", False)
-                and getattr(self.downlink_codec, "traceable", False)):
+        ok, _ = api_lib.resolve_fused(self.algorithm, mode,
+                                      self.uplink_codec,
+                                      self.downlink_codec)
+        if not ok:
             return False, None
         return True, plan[0].cfc
 
@@ -805,21 +673,17 @@ class FederatedTrainer:
         ok, cfc = self._fused_mode()
         if not ok:
             raise ValueError(
-                "fused_rounds requires the single-cohort vectorized path "
-                "(firm/firm_unreg/linear, homogeneous static configs) and "
-                "traceable codecs; use run()/run_round() instead")
+                "fused_rounds requires a fusable algorithm (traced server "
+                "exchange, vmap-safe local step), one full-population "
+                "static-config cohort, and codecs supporting the traced "
+                "contract; use run()/run_round() instead")
         fc = self.fc
         c_all = fc.n_clients
         n_part = min(c_all, max(1, int(round(fc.participation * c_all))))
         has_pref = self._stacked_pref is not None
         cfc_t = (dataclasses.replace(cfc, preference=None)
                  if has_pref else cfc)
-        alg = "linear" if self.ec.algorithm == "linear" else "firm"
-        lin_w = None
-        if self.ec.algorithm == "linear":
-            lin_w = jnp.asarray(
-                self.ec.linear_weights
-                or [1.0 / cfc.n_objectives] * cfc.n_objectives, jnp.float32)
+        extra = self.algorithm.traced_extra(cfc, self.ec)
         d = self.d_trainable
         dispatch0 = self.jit_dispatches
 
@@ -838,14 +702,15 @@ class FederatedTrainer:
             rng=self._rng)
         round_idxs = jnp.arange(self._round_idx, self._round_idx + rounds,
                                 dtype=jnp.int32)
-        fn = _jit_fused_rounds(self.cfg, cfc_t, alg, self.ec.prompt_len,
-                               self.ec.max_new, self._length_tol, has_pref,
+        fn = _jit_fused_rounds(self.cfg, cfc_t, self.algorithm.kernel,
+                               self.ec.prompt_len, self.ec.max_new,
+                               self._length_tol, has_pref,
                                self.ec.uplink_codec, self.ec.downlink_codec,
                                self._delta_spec, c_all, n_part)
         carry, new_global, ys = fn(
             carry, self.global_trainable, round_idxs, self._part_rng_base,
             self.frozen, self.ref_params, self._seeds_all, self._probs_all,
-            self._bands_h, self._bands_x, self._stacked_pref, lin_w)
+            self._bands_h, self._bands_x, self._stacked_pref, extra)
         self.jit_dispatches += 1
 
         # ONE host transfer for the whole chunk's metrics
@@ -906,74 +771,9 @@ class FederatedTrainer:
         for c in participants:
             self.client_states[c] = self.client_states[c]._replace(
                 trainable=jax.tree_util.tree_map(jnp.copy, broadcast))
-        round_metrics = []
-        # step-major over participants with per-client K (heterogeneous
-        # client_local_steps finish early and skip): the canonical order
-        # the cohort path's pre-drawn generation keys replicate
-        steps = {c: self._client_fcs[c].local_steps for c in participants}
-        max_k = max(steps.values())
-        if self.ec.algorithm in ("firm", "firm_unreg"):
-            for k in range(max_k):
-                for c in participants:
-                    if k >= steps[c]:
-                        continue
-                    batch = self._make_batch(c)
-                    self.client_states[c], m = self._jit_steps[c](
-                        self.client_states[c], self.frozen, batch)
-                    self.jit_dispatches += 1
-                    m["client"] = c
-                    round_metrics.append(m)
-        elif self.ec.algorithm == "fedcmoo":
-            grad_codec = self._grad_codec()
-            for k in range(fc.local_steps):
-                per_client = []
-                server_grads = []
-                for c in participants:
-                    batch = self._make_batch(c)
-                    grads, losses, extras = local_lib.fedcmoo_local_grads(
-                        self.cfg, fc, self.client_states[c], self.frozen,
-                        batch)
-                    per_client.append((grads, extras, batch.rewards.mean(0)))
-                    # gradients go up every local step: the O(CMd) cost;
-                    # the server solves λ from what it actually receives
-                    # (codec error feeds the q-term, Askin et al. Rmk 4.6)
-                    received = []
-                    for g in grads:
-                        gp, _, dec = grad_codec.roundtrip(
-                            g, key=self._next_key())
-                        self.ledger.send_up(gp)
-                        received.append(dec)
-                    server_grads.append(received)
-                lam = fedcmoo.fedcmoo_round_lambda(
-                    server_grads,
-                    compress_rank=self.ec.fedcmoo_compress_rank,
-                    key=self._next_key())
-                for ci, c in enumerate(participants):
-                    grads, extras, rmean = per_client[ci]
-                    self.client_states[c], m = local_lib.fedcmoo_local_apply(
-                        fc, self.client_states[c], grads, lam, extras)
-                    m["client"] = c
-                    m["rewards"] = rmean
-                    round_metrics.append(m)
-        elif self.ec.algorithm == "linear":
-            w = jnp.asarray(self.ec.linear_weights
-                            or [1.0 / fc.n_objectives] * fc.n_objectives,
-                            jnp.float32)
-            for k in range(max_k):
-                for c in participants:
-                    if k >= steps[c]:
-                        continue
-                    batch = self._make_batch(c)
-                    grads, losses, extras = local_lib.fedcmoo_local_grads(
-                        self.cfg, fc, self.client_states[c], self.frozen,
-                        batch)
-                    self.client_states[c], m = local_lib.fedcmoo_local_apply(
-                        fc, self.client_states[c], grads, w, extras)
-                    m["client"] = c
-                    m["rewards"] = batch.rewards.mean(0)
-                    round_metrics.append(m)
-        else:
-            raise ValueError(self.ec.algorithm)
+        # the algorithm owns the loop body (step order, exchanges, the
+        # per-entry metric dicts); the engine owns the common accounting
+        round_metrics = self.algorithm.loop_phase(self, fc, participants)
 
         # metrics stay device-resident: stack on device, convert to host
         # once per round in run_round's summary
@@ -1032,10 +832,13 @@ class FederatedTrainer:
         stacked = _stack_trees_jit(*states)
         self.jit_dispatches += 1
 
-        if self.ec.algorithm == "fedcmoo":
+        if not self.algorithm.caps.traced_server_exchange:
+            # host-driven server exchange: the algorithm owns the phase
+            # (jitted client phases around its host exchange)
             lams, rewards_mean, kl_mean, rewards_pc, stacked = \
-                self._vec_fedcmoo_steps(cfc, participants, stacked, seeds,
-                                        counts0, probs, band_h, band_x)
+                self.algorithm.exchange_phase_vectorized(
+                    self, cfc, participants, stacked, seeds, counts0,
+                    probs, band_h, band_x)
         else:
             if gen_keys is None:
                 # per-client generation keys, drawn in the loop path's
@@ -1044,16 +847,13 @@ class FederatedTrainer:
                 gen_keys = jnp.stack(
                     [jnp.stack([self._next_key() for _ in participants])
                      for _ in range(k_steps)])
-            lin_w = None
-            if self.ec.algorithm == "linear":
-                lin_w = jnp.asarray(
-                    self.ec.linear_weights or [1.0 / m] * m, jnp.float32)
-            alg = "linear" if self.ec.algorithm == "linear" else "firm"
-            fn = _jit_vec_round(self.cfg, cfc, alg, self.ec.prompt_len,
-                                self.ec.max_new, self._length_tol, has_pref)
+            extra = self.algorithm.traced_extra(cfc, self.ec)
+            fn = _jit_vec_round(self.cfg, cfc, self.algorithm.kernel,
+                                self.ec.prompt_len, self.ec.max_new,
+                                self._length_tol, has_pref)
             stacked, ms = fn(stacked, self.frozen, self.ref_params, seeds,
                              counts0, probs, band_h, band_x, gen_keys,
-                             pref, lin_w)
+                             pref, extra)
             self.jit_dispatches += 1
             lams = ms["lam"][-1]                              # (C, M)
             # one axis at a time: a flat (K*C) mean is emitted as a
@@ -1121,60 +921,6 @@ class FederatedTrainer:
         return LocalPhaseResult(jnp.stack(lam_rows), rew_acc / w_tot,
                                 kl_acc / w_tot, stacked_tr,
                                 jnp.stack(rpc_rows))
-
-    def _vec_fedcmoo_steps(self, cfc: FIRMConfig, participants: List[int],
-                           stacked, seeds, counts0, probs, band_h, band_x):
-        """FedCMOO vectorized local phase: two jitted dispatches per step
-        (vmapped grads, vmapped apply) around the batched server
-        exchange.  The exchange itself is fully vectorized since PR 4:
-        all C×M gradient trees flatten in one batched tree op, the codec
-        encodes them at the stacked Payload boundary (one kernel dispatch
-        for quantize codecs), and the stacked decode feeds the λ solve
-        directly — no per-client host loop remains."""
-        m = cfc.n_objectives
-        p_count = len(participants)
-        grad_codec = self._grad_codec()
-        grads_fn = _jit_vec_fedcmoo_grads(self.cfg, cfc, self.ec.max_new,
-                                          self._length_tol)
-        apply_fn = _jit_vec_fedcmoo_apply(cfc)
-        sampler = _jit_sample_block(cfc.batch_size, self.ec.prompt_len,
-                                    self.cfg.vocab)
-        lam_last, rew_hist, kl_hist = None, [], []
-        for k in range(cfc.local_steps):
-            # key parity with the loop path: per client, one batch key
-            # then M gradient-codec keys, interleaved in participant order
-            kb, kg = [], []
-            for _ in participants:
-                kb.append(self._next_key())
-                kg.extend(self._next_key() for _ in range(m))
-            prompts = sampler(seeds, counts0 + k, probs)
-            self.jit_dispatches += 1
-            grads, extras, rmean = grads_fn(
-                stacked, self.frozen, self.ref_params, prompts,
-                jnp.stack(kb), band_h, band_x)
-            self.jit_dispatches += 1
-            # (C, M, d) client-major rows match the loop path's upload
-            # order, so payload keys and ledger bytes are identical
-            gmat = _jit_grads_flat(m)(grads)
-            self.jit_dispatches += 1
-            gpayloads, _, gdec = grad_codec.roundtrip_stacked(
-                gmat.reshape(p_count * m, -1), self._delta_spec,
-                keys=kg)
-            for gp in gpayloads:
-                self.ledger.send_up(gp)
-            lam = fedcmoo.fedcmoo_round_lambda_stacked(
-                gdec.reshape(p_count, m, -1),
-                compress_rank=self.ec.fedcmoo_compress_rank,
-                key=self._next_key())
-            stacked, metrics = apply_fn(stacked, grads, lam, extras)
-            self.jit_dispatches += 1
-            lam_last = metrics["lam"]
-            rew_hist.append(rmean)
-            kl_hist.append(metrics["kl"])
-        rewards_mean = jnp.stack(rew_hist).reshape(-1, m).mean(0)
-        kl_mean = jnp.stack(kl_hist).mean()
-        rewards_pc = jnp.stack(rew_hist).mean(0)              # (C, M)
-        return lam_last, rewards_mean, kl_mean, rewards_pc, stacked
 
     def run(self, rounds: Optional[int] = None) -> List[dict]:
         total = rounds or self.fc.rounds

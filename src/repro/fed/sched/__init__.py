@@ -11,7 +11,7 @@ See README.md in this package for the time model and policy semantics.
 not reach back into ``repro.fed.engine``.
 """
 from repro.fed.sched.clock import EventQueue, SimClock
-from repro.fed.sched.cohort import Cohort, build_cohorts
+from repro.fed.sched.cohort import Cohort, build_cohorts, cohort_summaries
 from repro.fed.sched.profiles import (ClientProfile, PROFILE_PRESETS,
                                       sample_profiles)
 
@@ -28,5 +28,6 @@ def __getattr__(name):
 
 __all__ = [
     "EventQueue", "SimClock", "Cohort", "build_cohorts",
-    "ClientProfile", "PROFILE_PRESETS", "sample_profiles", *_LAZY,
+    "cohort_summaries", "ClientProfile", "PROFILE_PRESETS",
+    "sample_profiles", *_LAZY,
 ]

@@ -48,3 +48,9 @@ def build_cohorts(pairs: Sequence[Tuple[int, FIRMConfig]],
         groups.setdefault(static_config_key(fc, lift_preference),
                           []).append(c)
     return [Cohort(cfc=k, members=tuple(v)) for k, v in groups.items()]
+
+
+def cohort_summaries(plan: Sequence[Cohort]) -> Tuple[Tuple[int, int], ...]:
+    """(n_members, local_steps) per cohort — the ExecutionPlan's compact
+    view of the dispatch structure (JSON-able, order-preserving)."""
+    return tuple((len(co.members), co.cfc.local_steps) for co in plan)

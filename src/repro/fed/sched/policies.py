@@ -184,10 +184,11 @@ class FedBuffPolicy:
 
     def run(self, st: "ScheduledTrainer", rounds: int) -> List[dict]:
         tr, sc = st.trainer, st.sc
-        if tr.ec.algorithm not in ("firm", "firm_unreg", "linear"):
-            raise ValueError("fedbuff needs a client-local algorithm "
-                             "(firm/firm_unreg/linear); fedcmoo's per-step "
-                             "server exchange is inherently synchronous")
+        if tr.algorithm.caps.single_cohort_required:
+            raise ValueError(
+                "fedbuff needs a client-local algorithm; "
+                f"{tr.algorithm.name} requires lock-step participants "
+                "(per-step server exchange is inherently synchronous)")
         n = tr.fc.n_clients
         buf_size = sc.buffer_size or n
         if not 1 <= buf_size <= n:
@@ -327,6 +328,21 @@ class ScheduledTrainer:
         self.clock = SimClock()
         self.policy = make_policy(self.sc.policy)
         self.history: List[dict] = []
+        # a legacy-constructed trainer planned itself without this
+        # SchedConfig; re-resolve so trainer.plan reflects the policy it
+        # will actually run under (e.g. deadline/fedbuff force per-round
+        # execution even when the bare engine would fuse).  An
+        # algorithm x policy combination plan() rejects is left to raise
+        # from run() (the legacy contract: construction succeeds).
+        if trainer.plan.spec.sched is not self.sc:
+            from repro.fed import api
+            try:
+                trainer.plan = api.plan(
+                    api.RunSpec(model=trainer.cfg, firm=trainer.fc,
+                                engine=trainer.ec, sched=self.sc),
+                    d_trainable=trainer.d_trainable)
+            except ValueError:
+                pass
 
     def client_seconds(self, c: int, down_nbytes: float, up_nbytes: float,
                        local_steps: int) -> float:

@@ -1,0 +1,287 @@
+"""Capability-driven run API: plan-selection matrix, capability
+validation, backward-compat shims, and golden ExecutionPlan snapshots.
+
+The matrix test pins every fallback decision the engine used to hard-code
+(host-exchange algorithm -> no fused, sync + single cohort -> fused,
+het-K -> multi-cohort vectorized, ...) as a pure ``plan()`` outcome; the
+golden test serializes plan summaries for a small config matrix and
+diffs them against ``tests/golden_plans.json`` so a config silently
+falling back to the per-client loop fails PRs (regenerate with
+``PYTHONPATH=src python scripts/update_golden_plans.py``).
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FIRMConfig, SchedConfig
+from repro.fed import api
+from repro.fed.algorithms import (Algorithm, Capabilities,
+                                  available_algorithms, get_algorithm,
+                                  register_algorithm)
+from repro.fed.api import EngineConfig, RunSpec
+from repro.fed.engine import FederatedTrainer
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_plans.json"
+
+
+def _cfg():
+    return get_config("llama-3.2-1b").reduced(n_layers=2, d_model=64,
+                                              vocab=256)
+
+
+def _spec(algorithm="firm", *, n_clients=2, local_steps=1, m=2, seed=0,
+          sched=None, rounds=None, **kw):
+    fc_kw = {k: kw.pop(k) for k in ("client_preferences", "participation",
+                                    "client_local_steps") if k in kw}
+    fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
+                    local_steps=local_steps, batch_size=2, beta=0.05,
+                    **fc_kw)
+    ec = EngineConfig(algorithm=algorithm, max_new=6, prompt_len=4,
+                      seed=seed, **kw)
+    return RunSpec(model=_cfg(), firm=fc, engine=ec, sched=sched,
+                   rounds=rounds)
+
+
+# The config matrix the golden snapshot pins (name -> RunSpec).  Keep
+# entries deterministic: plan() touches no RNG beyond shape tracing.
+def golden_matrix():
+    return {
+        "firm_fused": _spec("firm", n_clients=4, fused_rounds=4, rounds=8),
+        "firm_per_round": _spec("firm", n_clients=4),
+        "firm_loop": _spec("firm", n_clients=4, vectorized_clients=False),
+        "firm_het_k": _spec("firm", n_clients=4, fused_rounds=4,
+                            client_local_steps=(1, 2, 1, 2)),
+        "firm_unreg_fused": _spec("firm_unreg", n_clients=2,
+                                  fused_rounds=2),
+        "linear_int8ef_fused": _spec("linear", n_clients=2, fused_rounds=2,
+                                     uplink_codec="int8+ef"),
+        "fedcmoo_no_fused": _spec("fedcmoo", n_clients=4, local_steps=2,
+                                  fused_rounds=4),
+        "firm_deadline": _spec("firm", n_clients=4, fused_rounds=4,
+                               sched=SchedConfig(policy="deadline",
+                                                 overselect=1.5,
+                                                 deadline_quantile=0.5)),
+        "firm_fedbuff_int8ef": _spec("firm", n_clients=4,
+                                     uplink_codec="int8+ef",
+                                     sched=SchedConfig(policy="fedbuff",
+                                                       buffer_size=2)),
+        "firm_partial_participation": _spec("firm", n_clients=4,
+                                            participation=0.5,
+                                            fused_rounds=4),
+    }
+
+
+# ------------------------------------------------- plan-selection matrix
+@pytest.mark.parametrize("name,expected_executor,expected_cohorts", [
+    ("firm_fused", "fused", 1),
+    ("firm_per_round", "vectorized", 1),
+    ("firm_loop", "loop", 0),
+    ("firm_het_k", "vectorized", 2),        # het-K -> multi-cohort, no fuse
+    ("firm_unreg_fused", "fused", 1),
+    ("linear_int8ef_fused", "fused", 1),
+    ("fedcmoo_no_fused", "vectorized", 1),  # host exchange -> never fused
+    ("firm_deadline", "vectorized", 1),     # clock-driven -> per-round
+    ("firm_fedbuff_int8ef", "vectorized", 1),
+    ("firm_partial_participation", "fused", 1),
+])
+def test_executor_matrix(name, expected_executor, expected_cohorts):
+    plan = api.plan(golden_matrix()[name])
+    assert plan.executor == expected_executor, plan.reasons
+    assert len(plan.cohorts) == expected_cohorts
+
+
+def test_plan_reproduces_engine_fallbacks_capability_only():
+    """The plan's executor equals what the trainer actually resolves —
+    both go through the same capability queries, never name strings."""
+    for name in ("firm_fused", "fedcmoo_no_fused", "firm_het_k",
+                 "firm_loop"):
+        spec = golden_matrix()[name]
+        plan = api.plan(spec)
+        tr = FederatedTrainer(spec.model, spec.firm, spec.engine)
+        fused = tr.ec.fused_rounds > 1 and tr._fused_mode()[0]
+        mode, _ = tr._local_phase_mode(list(range(spec.firm.n_clients)))
+        want = ("fused" if fused
+                else "loop" if mode == "loop" else "vectorized")
+        assert plan.executor == want, (name, plan.reasons)
+
+
+def test_plan_partial_participation_counts():
+    plan = api.plan(golden_matrix()["firm_partial_participation"])
+    assert plan.n_clients == 4
+    assert plan.participants_per_round == 2
+
+
+def test_plan_fused_chunking_partial_tail():
+    plan = api.plan(_spec("firm", fused_rounds=3, rounds=7))
+    assert plan.fused_chunks == (3, 3, 1)
+
+
+def test_plan_validates_like_execution():
+    with pytest.raises(ValueError, match="fedcmoo"):
+        api.plan(_spec("fedcmoo", n_clients=2, client_local_steps=(1, 2)))
+    with pytest.raises(ValueError, match="fedbuff"):
+        api.plan(_spec("fedcmoo", sched=SchedConfig(policy="fedbuff")))
+    with pytest.raises(ValueError, match="policy"):
+        api.plan(_spec("firm", sched=SchedConfig(policy="psychic")))
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        api.plan(_spec("adam"))
+
+
+# ------------------------------------------------- capability validation
+def test_fusable_requires_traced_server_exchange():
+    class Bad(Algorithm):
+        name = "bad_fusable"
+        kernel = "bad_fusable"
+        caps = Capabilities(fusable=True, traced_server_exchange=False,
+                            single_cohort_required=True)
+
+    with pytest.raises(ValueError, match="traced_server_exchange"):
+        register_algorithm(Bad())
+    assert "bad_fusable" not in available_algorithms()
+
+
+def test_fusable_requires_vmap_safe():
+    class Bad(Algorithm):
+        name = "bad_vmap"
+        kernel = "bad_vmap"
+        caps = Capabilities(fusable=True, vmap_safe=False)
+
+    with pytest.raises(ValueError, match="vmap_safe"):
+        register_algorithm(Bad())
+
+
+def test_non_vmap_safe_algorithm_plans_loop():
+    """A registered algorithm declaring vmap_safe=False must resolve to
+    the per-client loop (and never fuse) purely from its capabilities."""
+    class LoopOnly(Algorithm):
+        name = "_test_loop_only"
+        kernel = "_test_loop_only"
+        caps = Capabilities(vmap_safe=False, fusable=False)
+
+    register_algorithm(LoopOnly())
+    try:
+        plan = api.plan(_spec("_test_loop_only", fused_rounds=4))
+        assert plan.executor == "loop"
+        assert plan.local_mode == "loop"
+    finally:
+        from repro.fed.algorithms import _REGISTRY
+        del _REGISTRY["_test_loop_only"]
+
+
+def test_registry_roundtrip():
+    assert set(available_algorithms()) >= {"firm", "firm_unreg", "linear",
+                                           "fedcmoo"}
+    assert get_algorithm("firm_unreg").kernel == "firm"
+    assert get_algorithm("fedcmoo").caps.single_cohort_required
+
+
+# --------------------------------------------------- backward-compat shims
+def test_front_door_matches_direct_trainer_bit_identical():
+    """plan().build()/execute() and the legacy FederatedTrainer(...) entry
+    point produce bit-identical histories and aggregates."""
+    spec = _spec("firm", n_clients=2, rounds=2)
+    h0 = api.execute(api.plan(spec))
+    tr = FederatedTrainer(spec.model, spec.firm,
+                          EngineConfig(algorithm="firm", max_new=6,
+                                       prompt_len=4, seed=0))
+    h1 = tr.run(2)
+    assert len(h0) == len(h1) == 2
+    for a, b in zip(h0, h1):
+        np.testing.assert_array_equal(np.asarray(a["rewards"]),
+                                      np.asarray(b["rewards"]))
+        np.testing.assert_array_equal(np.asarray(a["per_client_lam"]),
+                                      np.asarray(b["per_client_lam"]))
+        assert a["comm_bytes"] == b["comm_bytes"]
+        assert a["participants"] == b["participants"]
+        assert a["dispatches"] == b["dispatches"]
+
+
+def test_run_round_summary_keys_stable():
+    """The run_round result dict keeps its public keys (source compat)."""
+    tr = FederatedTrainer(_cfg(),
+                          FIRMConfig(n_objectives=2, n_clients=2,
+                                     local_steps=1, batch_size=2,
+                                     beta=0.05),
+                          EngineConfig(max_new=6, prompt_len=4))
+    s = tr.run_round()
+    for key in ("rewards", "lam_mean", "lam_disagreement", "param_drift",
+                "kl", "comm_bytes", "up_bytes", "down_bytes",
+                "participants", "per_client_lam", "rewards_per_client",
+                "dispatches", "up_nbytes", "down_nbytes", "local_steps",
+                "cohorts"):
+        assert key in s, key
+
+
+def test_scheduled_trainer_refreshes_legacy_plan():
+    """Wrapping a legacy-constructed trainer in ScheduledTrainer
+    re-resolves trainer.plan under the actual policy (deadline/fedbuff
+    force per-round even when the bare engine would fuse)."""
+    from repro.fed.sched.policies import ScheduledTrainer
+    tr = FederatedTrainer(_cfg(),
+                          FIRMConfig(n_objectives=2, n_clients=2,
+                                     local_steps=1, batch_size=2,
+                                     beta=0.05),
+                          EngineConfig(max_new=6, prompt_len=4,
+                                       fused_rounds=4))
+    assert tr.plan.executor == "fused"         # self-planned without sched
+    st = ScheduledTrainer(tr, SchedConfig(policy="deadline"))
+    assert st.trainer.plan.policy == "deadline"
+    assert st.trainer.plan.executor == "vectorized"
+
+
+def test_benchmark_make_trainer_rides_front_door():
+    """benchmarks.common.make_trainer routes through RunSpec/plan and
+    stays bit-identical to direct construction (shared BENCH cells)."""
+    from benchmarks.common import make_trainer
+    tr0 = make_trainer("firm", n_clients=2, local_steps=1, batch=2)
+    assert tr0.plan.executor == "vectorized"
+    h0 = tr0.run(1)
+    tr1 = FederatedTrainer(
+        _cfg(), FIRMConfig(n_objectives=2, n_clients=2, local_steps=1,
+                           batch_size=2, beta=0.05),
+        EngineConfig(algorithm="firm", max_new=8, prompt_len=4))
+    h1 = tr1.run(1)
+    np.testing.assert_array_equal(np.asarray(h0[0]["rewards"]),
+                                  np.asarray(h1[0]["rewards"]))
+    assert h0[0]["comm_bytes"] == h1[0]["comm_bytes"]
+
+
+# ------------------------------------------------- byte-model exactness
+@pytest.mark.parametrize("codec", ["identity", "int8+ef"])
+def test_plan_bytes_match_measured_ledger(codec):
+    """plan() predicted the ledger exactly, before compilation."""
+    spec = _spec("firm", n_clients=2, uplink_codec=codec,
+                 downlink_codec="int8")
+    plan = api.plan(spec)
+    tr = plan.build()
+    s = tr.run_round()
+    assert s["up_bytes"] == plan.up_bytes_per_round
+    assert s["down_bytes"] == plan.down_bytes_per_round
+
+
+@pytest.mark.slow
+def test_plan_bytes_match_measured_fedcmoo():
+    """Per-step gradient uploads ride the byte model too."""
+    spec = _spec("fedcmoo", n_clients=2, local_steps=2,
+                 uplink_codec="int8+ef")
+    plan = api.plan(spec)
+    s = plan.build().run_round()
+    assert s["up_bytes"] == plan.up_bytes_per_round
+
+
+# ------------------------------------------------- golden plan snapshots
+def test_golden_plan_snapshots():
+    """Serialized ExecutionPlan summaries for the config matrix match the
+    checked-in golden file — a silent executor regression (e.g. a config
+    quietly falling back to the per-client loop) fails here."""
+    got = {name: api.plan(spec).summary()
+           for name, spec in golden_matrix().items()}
+    want = json.loads(GOLDEN.read_text())
+    assert got == want, (
+        "ExecutionPlan summaries drifted from tests/golden_plans.json; "
+        "if the change is intentional regenerate with "
+        "`PYTHONPATH=src python scripts/update_golden_plans.py` and "
+        "review the diff.\n" + json.dumps(got, indent=2, sort_keys=True))
