@@ -1,0 +1,179 @@
+"""CI-facing bench reporting: trajectory tables, smoke audits, sample trace.
+
+Three subcommands (combinable), all dependency-free:
+
+  --table [DIR]     parse the ``BENCH_*.json`` artifacts the benchmarks
+                    emit (round_throughput, sched_wallclock) into
+                    markdown trajectory tables on stdout — what the CI
+                    job appends to its step summary on main
+  --smoke           fast-lane plan audit: run the firm x {identity,
+                    int8+ef} x {per-round, fused} matrix at toy scale
+                    through ``repro.obs.audit_run`` and exit nonzero on
+                    any predicted-vs-observed drift (dispatch counts,
+                    wire bytes, post-warmup recompiles)
+  --trace-out PATH  export a sample simulated-time Perfetto trace
+                    (bimodal heterogeneity, deadline policy) that CI
+                    uploads as an artifact — open at ui.perfetto.dev
+
+  PYTHONPATH=src python -m benchmarks.bench_report --smoke
+  PYTHONPATH=src python -m benchmarks.bench_report --table .
+  PYTHONPATH=src python -m benchmarks.bench_report --trace-out sample.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+AUDIT_CODECS = ("identity", "int8+ef")
+AUDIT_EXECUTORS = ("per-round", "fused")   # per-round == vectorized
+
+
+# ------------------------------------------------------------------ table
+def _md_table(headers, rows) -> str:
+    lines = ["| " + " | ".join(headers) + " |",
+             "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(lines)
+
+
+def _round_throughput_table(data: dict) -> str:
+    rows = []
+    for c, cell in sorted(data.get("clients", {}).items(), key=lambda kv:
+                          int(kv[0])):
+        rows.append([
+            c,
+            f"{cell['loop']['us_per_round']:.0f}",
+            f"{cell['vectorized']['us_per_round']:.0f}",
+            f"{cell['fused']['us_per_round']:.0f}",
+            f"{cell['speedup']:.2f}x",
+            f"{cell['fused_speedup_vs_vectorized']:.2f}x",
+            f"{cell['vectorized']['dispatches_per_round']:.0f}",
+            f"{cell['fused']['dispatches_per_run']:.0f}",
+        ])
+    return "### round throughput (us/round)\n\n" + _md_table(
+        ["clients", "loop", "vectorized", "fused", "vec speedup",
+         "fused speedup", "vec disp/round", "fused disp/chunk"], rows)
+
+
+def _sched_wallclock_table(data: dict) -> str:
+    rows = []
+    for c in data.get("cells", []):
+        rows.append([
+            c["preset"], c["policy"], c["codec"],
+            f"{c['sim_seconds_total']:.4f}",
+            c["dropped_total"], c["max_staleness"],
+        ])
+    out = ["### scheduler simulated wall-clock "
+           f"({data.get('rounds')} rounds, {data.get('n_clients')} clients)",
+           "", _md_table(["preset", "policy", "codec", "sim seconds",
+                          "dropped", "max staleness"], rows)]
+    acc = data.get("acceptance", {})
+    if acc:
+        arows = [[codec, a["sync_seconds"], a["deadline_seconds"],
+                  a["fedbuff_seconds"], f"{a['deadline_speedup']}x",
+                  f"{a['fedbuff_speedup']}x"]
+                 for codec, a in sorted(acc.items())]
+        out += ["", _md_table(["codec", "sync s", "deadline s", "fedbuff s",
+                               "deadline speedup", "fedbuff speedup"],
+                              arows)]
+    return "\n".join(out)
+
+
+_TABLES = {
+    "BENCH_round_throughput.json": _round_throughput_table,
+    "BENCH_sched_wallclock.json": _sched_wallclock_table,
+}
+
+
+def report_tables(bench_dir: str) -> int:
+    """Render every known BENCH_*.json under ``bench_dir``; returns the
+    number of artifacts rendered (0 is not an error — a fast-lane run
+    may not have produced any)."""
+    found = 0
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        base = os.path.basename(path)
+        fmt = _TABLES.get(base)
+        with open(path) as f:
+            data = json.load(f)
+        if fmt is None:
+            print(f"### {base}\n\n```json\n"
+                  + json.dumps(data, indent=1)[:2000] + "\n```\n")
+        else:
+            print(fmt(data) + "\n")
+        found += 1
+    if not found:
+        print(f"(no BENCH_*.json artifacts under {bench_dir!r})")
+    return found
+
+
+# ------------------------------------------------------------------ smoke
+def smoke_audit() -> int:
+    """The plan-audit matrix; returns the number of failed cells."""
+    from benchmarks.common import make_trainer
+    from repro.obs import PlanDriftError, audit_run
+
+    failures = 0
+    for codec in AUDIT_CODECS:
+        for executor in AUDIT_EXECUTORS:
+            fused = 2 if executor == "fused" else 1
+            tr = make_trainer("firm", n_clients=2, m=2, local_steps=1,
+                              batch=2, uplink_codec=codec,
+                              fused_rounds=fused)
+            tag = f"audit firm/{executor}/{codec}"
+            try:
+                report = audit_run(tr).raise_on_drift()
+            except PlanDriftError as e:
+                failures += 1
+                print(f"FAIL {tag}\n{e}", flush=True)
+                continue
+            checks = {c.name: c.observed for c in report.checks}
+            print(f"ok   {tag}: {json.dumps(checks)}", flush=True)
+    return failures
+
+
+# ------------------------------------------------------------------ trace
+def sample_trace(path: str) -> None:
+    """Bimodal-heterogeneity deadline run -> Perfetto trace at ``path``."""
+    from benchmarks.common import make_trainer
+    from repro.configs.base import SchedConfig
+
+    st = make_trainer("firm", n_clients=8, local_steps=1, batch=2,
+                      sched=SchedConfig(policy="deadline",
+                                        profile="bimodal", profile_seed=0,
+                                        overselect=1.0,
+                                        deadline_quantile=0.2))
+    st.run(3)
+    st.export_trace(path)
+    print(f"wrote sample deadline/bimodal trace -> {path}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--table", nargs="?", const=".", default=None,
+                    metavar="DIR", help="render BENCH_*.json tables")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the plan-audit smoke matrix")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a sample Perfetto trace here")
+    args = ap.parse_args()
+    if not (args.table or args.smoke or args.trace_out):
+        ap.error("nothing to do: pass --table, --smoke and/or --trace-out")
+
+    failures = 0
+    if args.smoke:
+        failures += smoke_audit()
+    if args.trace_out:
+        sample_trace(args.trace_out)
+    if args.table:
+        report_tables(args.table)
+    if failures:
+        print(f"{failures} audit cell(s) drifted", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

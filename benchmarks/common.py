@@ -12,6 +12,7 @@ this), with the plan available for inspection via ``trainer.plan``.
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import numpy as np
@@ -20,6 +21,71 @@ from repro.configs import get_config
 from repro.configs.base import FIRMConfig
 from repro.fed import api
 from repro.fed.api import EngineConfig, RunSpec
+
+# Observability options shared by every benchmark module.  ``run.py`` (or
+# a standalone ``__main__``) fills these from CLI flags via
+# ``parse_cli_options``; benchmark cells read them through
+# ``cell_sink_spec`` / ``trace_path``.  Defaults keep telemetry off, so
+# plain imports and tests see the pre-obs behaviour.
+OPTIONS = {
+    "trace_out": None,      # directory for Perfetto trace-event JSON files
+    "metrics_sink": None,   # sink spec template: memory | jsonl:P | csv:P
+}
+
+
+def add_obs_flags(ap) -> None:
+    """Attach the shared observability flags to an ArgumentParser."""
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="write Perfetto trace-event JSON files here")
+    ap.add_argument("--metrics-sink", default=None, metavar="SPEC",
+                    help="metric sink spec (memory | jsonl:PATH | csv:PATH; "
+                         "file paths are suffixed per benchmark cell)")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="enable jax_debug_nans for this run")
+    ap.add_argument("--x64", action="store_true",
+                    help="enable 64-bit mode for this run")
+
+
+def parse_cli_options(args) -> None:
+    """Apply parsed obs flags: fill OPTIONS and flip debug toggles."""
+    from repro.obs import debug
+    OPTIONS["trace_out"] = args.trace_out
+    OPTIONS["metrics_sink"] = args.metrics_sink
+    if args.trace_out:
+        os.makedirs(args.trace_out, exist_ok=True)
+    if args.debug_nans:
+        debug.set_debug_nan(True)
+    if args.x64:
+        debug.set_x64(True)
+
+
+def cell_sink_spec(cell: str):
+    """Per-cell sink spec from the global template.
+
+    File-backed sinks get the cell name spliced in before the extension
+    so concurrent cells don't clobber one file: ``jsonl:out.jsonl`` ->
+    ``jsonl:out.<cell>.jsonl``.  Memory specs pass through unchanged.
+    """
+    spec = OPTIONS["metrics_sink"]
+    if not spec:
+        return None
+    parts = []
+    for s in spec.split(","):
+        kind, _, arg = s.strip().partition(":")
+        if arg:
+            root, ext = os.path.splitext(arg)
+            parts.append(f"{kind}:{root}.{cell}{ext or ''}")
+        else:
+            parts.append(s.strip())
+    return ",".join(parts)
+
+
+def trace_path(cell: str):
+    """Trace file path for a benchmark cell, or None when tracing is off."""
+    out = OPTIONS["trace_out"]
+    if not out:
+        return None
+    return os.path.join(out, f"{cell}.trace.json")
 
 
 def row(name: str, us_per_call: float, derived: dict) -> str:
@@ -38,7 +104,7 @@ def make_spec(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
               heterogeneous_rms=False, dirichlet_alpha=0.3,
               uplink_codec="identity", downlink_codec="identity",
               vectorized=True, fused_rounds=1, sched=None,
-              cfg=None) -> RunSpec:
+              metrics_sink=None, cfg=None) -> RunSpec:
     cfg = cfg or tiny_cfg()
     fc = FIRMConfig(n_objectives=m, n_clients=n_clients,
                     local_steps=local_steps, batch_size=batch, beta=beta,
@@ -49,7 +115,8 @@ def make_spec(algorithm="firm", *, beta=0.05, n_clients=2, m=2,
                       uplink_codec=uplink_codec,
                       downlink_codec=downlink_codec,
                       vectorized_clients=vectorized,
-                      fused_rounds=fused_rounds)
+                      fused_rounds=fused_rounds,
+                      metrics_sink=metrics_sink)
     return RunSpec(model=cfg, firm=fc, engine=ec, sched=sched)
 
 

@@ -21,7 +21,8 @@ from __future__ import annotations
 import json
 import time
 
-from benchmarks.common import make_trainer, row
+from benchmarks.common import cell_sink_spec, make_trainer, row, trace_path
+from repro.obs import TraceBuilder, jitwatch
 
 CLIENT_COUNTS = (4, 8, 16)
 # K=1, B=1: the communication-bound regime FIRM targets (a round IS
@@ -58,15 +59,25 @@ def _measure(vectorized: bool, n_clients: int) -> dict:
 
 
 def _measure_fused(n_clients: int, r: int = FUSED_R) -> dict:
+    name = f"round_throughput_fused_c{n_clients}"
     tr = make_trainer("firm", n_clients=n_clients, m=2,
                       local_steps=LOCAL_STEPS, batch=BATCH,
-                      fused_rounds=r)
+                      fused_rounds=r, metrics_sink=cell_sink_spec(name))
     assert tr.plan.executor == "fused", tr.plan.executor
     tr.run(r)                                   # compile/warmup chunk
     d0 = tr.jit_dispatches
     t0 = time.perf_counter()
-    tr.run(r * FUSED_CHUNKS)
+    # record jit entries during the timed chunks so --trace-out can
+    # render compile-vs-execute host wall-clock spans per program
+    with jitwatch.record() as jlog:
+        tr.run(r * FUSED_CHUNKS)
     dt = time.perf_counter() - t0
+    tp = trace_path(name)
+    if tp:
+        tb = TraceBuilder()
+        tb.add_host_spans(jlog.spans)
+        tb.write(tp)
+    tr.obs.close()
     rounds = r * FUSED_CHUNKS
     return {
         "executor": tr.plan.executor,

@@ -3,6 +3,8 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig2,thm45
+  PYTHONPATH=src python -m benchmarks.run --only sched --trace-out traces/ \
+      --metrics-sink jsonl:metrics.jsonl             # telemetry exports
 
 Groups:
   paper_figures  — Figs. 1-8 / RQ1-RQ3 / App. A experiments (toy scale)
@@ -24,7 +26,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated substrings of bench names")
+    from benchmarks import common
+    common.add_obs_flags(ap)
     args = ap.parse_args()
+    common.parse_cli_options(args)
 
     from benchmarks import (codec_tradeoff, compression_error, kernels_micro,
                             paper_figures, roofline_report,

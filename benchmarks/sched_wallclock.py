@@ -11,10 +11,15 @@ derives from measured Payload bytes), so the sweep crosses policies
 with the uplink codec.
 
 Emits ``BENCH_sched_wallclock.json`` next to the CSV rows (CI uploads
-it on main full runs, alongside the round-throughput baseline).
+it on main full runs, alongside the round-throughput baseline).  With
+``--trace-out DIR`` each cell additionally exports its simulated-time
+schedule as Perfetto trace-event JSON (one file per cell), and
+``--metrics-sink jsonl:P`` streams each cell's metric records to
+per-cell files.
 
   PYTHONPATH=src python -m benchmarks.run --only sched_wallclock
   PYTHONPATH=src python -m benchmarks.sched_wallclock      # standalone
+  PYTHONPATH=src python -m benchmarks.sched_wallclock --trace-out traces/
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import make_trainer, row
+from benchmarks.common import cell_sink_spec, make_trainer, row, trace_path
 from repro.configs.base import SchedConfig
 
 POLICIES = ("sync", "deadline", "fedbuff")
@@ -45,11 +50,17 @@ def _sched_config(policy: str, preset: str) -> SchedConfig:
 
 
 def _cell(policy: str, codec: str, preset: str) -> dict:
+    name = f"sched_{preset}_{policy}_{codec.replace('+', '_')}"
     # RunSpec front door: sched= returns the ScheduledTrainer directly
     st = make_trainer("firm", beta=0.05, n_clients=N_CLIENTS,
                       local_steps=1, batch=2, uplink_codec=codec,
-                      sched=_sched_config(policy, preset))
+                      sched=_sched_config(policy, preset),
+                      metrics_sink=cell_sink_spec(name))
     hist = st.run(ROUNDS)
+    tp = trace_path(name)
+    if tp:
+        st.export_trace(tp)        # simulated-time Perfetto timeline
+    st.obs.close()
     last = hist[-1]
     sim_time = float(last["sim_time"])
     rewards = np.asarray(last["rewards"], np.float64)
@@ -110,6 +121,13 @@ ALL = [bench_sched_wallclock]
 
 
 if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser()
+    common.add_obs_flags(ap)
+    common.parse_cli_options(ap.parse_args())
     print("name,us_per_call,derived")
     for fn in ALL:
         for line in fn():

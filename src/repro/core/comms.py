@@ -116,6 +116,23 @@ def local_phase_tokens(local_steps: int, batch_size: int,
     return int(local_steps) * int(batch_size) * int(seq_len)
 
 
+def client_round_segments(profile, down_nbytes: float, up_nbytes: float,
+                          local_steps: int, batch_size: int,
+                          seq_len: int):
+    """One client round as ordered (phase, seconds) segments:
+    download -> local compute -> upload.  The scheduler's round time is
+    the sum; the obs trace emitter renders each segment as its own span,
+    so the timeline decomposes exactly into the reported total."""
+    toks = local_phase_tokens(local_steps, batch_size, seq_len)
+    return (
+        ("download", transmission_seconds(down_nbytes,
+                                          profile.down_bytes_per_sec)),
+        ("compute", compute_seconds(toks, profile.tokens_per_sec)),
+        ("upload", transmission_seconds(up_nbytes,
+                                        profile.up_bytes_per_sec)),
+    )
+
+
 @dataclasses.dataclass
 class CommsLedger:
     up_bytes: int = 0

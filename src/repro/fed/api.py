@@ -70,6 +70,10 @@ class EngineConfig:
     # R rounds.  Granted only for fusable algorithms on the
     # single-cohort vectorized path with traceable codecs.
     fused_rounds: int = 1
+    # extra telemetry sinks for the round-summary pipeline
+    # (repro.obs.metrics specs, e.g. "jsonl:metrics.jsonl" or
+    # "jsonl:m.jsonl,csv:m.csv"); an in-memory sink is always attached
+    metrics_sink: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

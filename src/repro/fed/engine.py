@@ -103,6 +103,9 @@ from repro.fed.algorithms import client_configs, get_algorithm
 from repro.fed.api import EngineConfig  # noqa: F401  (canonical home is api)
 from repro.models import transformer
 from repro.models.common import merge_trainable, split_trainable, tree_size
+from repro.obs import jitwatch
+from repro.obs import records as obs_records
+from repro.obs.metrics import MetricsPipeline
 from repro.rlhf import local as local_lib
 from repro.rlhf import ppo, rewards as rewards_lib
 from repro.rlhf.sampling import generate
@@ -113,7 +116,7 @@ def _jit_ref_logprobs(cfg: ModelConfig):
     def ref_lp(ref_params, tokens):
         out = transformer.forward_seq(cfg, ref_params, tokens)
         return ppo.token_logprobs(out["logits"], tokens)
-    return jax.jit(ref_lp)
+    return jitwatch.wrap("ref_logprobs", jax.jit(ref_lp))
 
 
 def _make_round_fn(cfg: ModelConfig, cfc: FIRMConfig, kernel: str,
@@ -174,24 +177,30 @@ def _jit_vec_round(cfg: ModelConfig, cfc: FIRMConfig, kernel: str,
                    has_pref: bool):
     """The per-round dispatch of ``_make_round_fn`` (stacked state
     donated)."""
-    return jax.jit(_make_round_fn(cfg, cfc, kernel, prompt_len,
-                                  max_new, length_tol, has_pref),
-                   donate_argnums=(0,))
+    return jitwatch.wrap(
+        f"vec_round[{kernel}]",
+        jax.jit(_make_round_fn(cfg, cfc, kernel, prompt_len,
+                               max_new, length_tol, has_pref),
+                donate_argnums=(0,)))
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_unstack(n: int):
-    return jax.jit(lambda tree: tuple(fedavg.unstack_tree(tree, n)))
+    return jitwatch.wrap(
+        "unstack",
+        jax.jit(lambda tree: tuple(fedavg.unstack_tree(tree, n))))
 
 
-_stack_trees_jit = jax.jit(lambda *trees: fedavg.stack_trees(trees))
+_stack_trees_jit = jitwatch.wrap(
+    "stack_trees", jax.jit(lambda *trees: fedavg.stack_trees(trees)))
 
 # all C client deltas vs the broadcast anchor flattened in ONE batched
 # tree op -> (C, d) f32; row c is bit-identical to tree_to_flat(delta_c)
-_delta_flat_jit = jax.jit(lambda stacked, anchor: jnp.concatenate(
-    [(a - b).astype(jnp.float32).reshape(a.shape[0], -1)
-     for a, b in zip(jax.tree_util.tree_leaves(stacked),
-                     jax.tree_util.tree_leaves(anchor))], axis=1))
+_delta_flat_jit = jitwatch.wrap("delta_flat", jax.jit(
+    lambda stacked, anchor: jnp.concatenate(
+        [(a - b).astype(jnp.float32).reshape(a.shape[0], -1)
+         for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                         jax.tree_util.tree_leaves(anchor))], axis=1)))
 
 
 @functools.lru_cache(maxsize=None)
@@ -209,12 +218,11 @@ def _jit_flat_aggregate(spec):
         return jax.tree_util.tree_map(lambda b, d: b + d, anchor,
                                       codec_lib.flat_to_tree(agg, spec))
 
-    return jax.jit(fn)
+    return jitwatch.wrap("flat_aggregate", jax.jit(fn))
 
 
-@jax.jit
-def _summary_device(lams, rewards_mean, kl_mean, stacked_trainable,
-                    rewards_pc):
+def _summary_device_fn(lams, rewards_mean, kl_mean, stacked_trainable,
+                       rewards_pc):
     """All round-summary statistics computed device-side; the engine does
     ONE host transfer per round (jax.device_get of this dict)."""
     return {
@@ -226,6 +234,9 @@ def _summary_device(lams, rewards_mean, kl_mean, stacked_trainable,
         "per_client_lam": lams,
         "rewards_per_client": rewards_pc,
     }
+
+
+_summary_device = jitwatch.wrap("summary_device", jax.jit(_summary_device_fn))
 
 
 class LocalPhaseResult(NamedTuple):
@@ -407,7 +418,8 @@ def _jit_fused_rounds(cfg: ModelConfig, cfc: FIRMConfig, kernel: str,
         return (FusedCarry(states, ul_state, dl_state, counts, rng),
                 g_tree, ys)
 
-    return jax.jit(fused, donate_argnums=(0,))
+    return jitwatch.wrap(f"fused_rounds[{kernel}]",
+                         jax.jit(fused, donate_argnums=(0,)))
 
 
 class FederatedTrainer:
@@ -489,6 +501,14 @@ class FederatedTrainer:
             if fc.client_preferences is not None else None)
         # engine-level jitted dispatch counter (round_throughput benchmark)
         self.jit_dispatches = 0
+        # engine-owned device->host summary transfers: ONE per round on
+        # the per-round paths, ONE per chunk on the fused path (the plan
+        # auditor and the obs overhead test read this)
+        self.host_transfers = 0
+        # telemetry write path: every round summary fans out through
+        # this pipeline (EngineConfig.metrics_sink names extra sinks;
+        # an in-memory sink is always attached)
+        self.obs = MetricsPipeline.from_spec(ec.metrics_sink)
         # last round's uplink payloads (per-round path only; offline
         # payload analysis, e.g. entropy estimates in codec_tradeoff)
         self._last_up_payloads: List = []
@@ -585,6 +605,7 @@ class FederatedTrainer:
         fc = self._fc_for_algorithm()
         if participants is None:
             participants = self._sample_participants()
+        round_idx = self._round_idx
         dispatch0 = self.jit_dispatches
         # broadcast θ_t through the downlink codec; every client receives
         # (and trains from) the same decoded broadcast
@@ -636,27 +657,23 @@ class FederatedTrainer:
                                 res.stacked_trainable, res.rewards_pc)
         self.jit_dispatches += 1
         host = jax.device_get(stats)
-        summary = {
-            "rewards": host["rewards"],
-            "lam_mean": host["lam_mean"],
-            "lam_disagreement": float(host["lam_disagreement"]),
-            "param_drift": float(host["param_drift"]),
-            "kl": float(host["kl"]),
-            "comm_bytes": self.ledger.total,
-            "up_bytes": self.ledger.up_bytes,
-            "down_bytes": self.ledger.down_bytes,
-            "participants": participants,
-            "per_client_lam": host["per_client_lam"],
-            "rewards_per_client": host["rewards_per_client"],
-            "dispatches": self.jit_dispatches - dispatch0,
+        self.host_transfers += 1
+        summary = obs_records.round_summary(
+            stats=host,
+            comm_bytes=self.ledger.total,
+            up_bytes=self.ledger.up_bytes,
+            down_bytes=self.ledger.down_bytes,
+            participants=participants,
+            dispatches=self.jit_dispatches - dispatch0,
             # per-client wire/work facts the scheduler's time model reads
-            "up_nbytes": [int(p.nbytes) for p in payloads],
-            "down_nbytes": comms.measured_bytes(dl_payload),
-            "local_steps": [self._client_fcs[c].local_steps
-                            for c in participants],
-            "cohorts": len(plan) if plan is not None else 0,
-        }
+            up_nbytes=[int(p.nbytes) for p in payloads],
+            down_nbytes=comms.measured_bytes(dl_payload),
+            local_steps=[self._client_fcs[c].local_steps
+                         for c in participants],
+            cohorts=len(plan) if plan is not None else 0,
+        )
         self.history.append(summary)
+        self.obs.emit_round(summary, round=round_idx)
         return summary
 
     # ------------------------------------------------- fused rounds path
@@ -715,6 +732,7 @@ class FederatedTrainer:
 
         # ONE host transfer for the whole chunk's metrics
         host = jax.device_get({"ys": ys, "counts": carry.counts})
+        self.host_transfers += 1
         self.client_states = list(_jit_unstack(c_all)(carry.states))
         self.jit_dispatches += 1
         self.global_trainable = new_global
@@ -731,6 +749,7 @@ class FederatedTrainer:
         down_static = self.downlink_codec.nbytes_static(d)
         per_round_dispatches = (self.jit_dispatches - dispatch0) / rounds
         ys_h = host["ys"]
+        round0 = self._round_idx - rounds
         out = []
         for r in range(rounds):
             parts = [int(x) for x in ys_h["participants"][r]]
@@ -738,27 +757,27 @@ class FederatedTrainer:
             self.ledger.down_bytes += p * down_static
             self.ledger.up_bytes += p * up_static
             self.ledger.next_round()
-            summary = {
-                "rewards": ys_h["rewards"][r],
-                "lam_mean": ys_h["lam_mean"][r],
-                "lam_disagreement": float(ys_h["lam_disagreement"][r]),
-                "param_drift": float(ys_h["param_drift"][r]),
-                "kl": float(ys_h["kl"][r]),
-                "comm_bytes": self.ledger.total,
-                "up_bytes": self.ledger.up_bytes,
-                "down_bytes": self.ledger.down_bytes,
-                "participants": parts,
-                "per_client_lam": ys_h["per_client_lam"][r],
-                "rewards_per_client": ys_h["rewards_per_client"][r],
-                "dispatches": per_round_dispatches,
-                "up_nbytes": [up_static] * p,
-                "down_nbytes": down_static,
-                "local_steps": [cfc.local_steps] * p,
-                "cohorts": 1,
-                "fused": rounds,
-            }
+            # per-round records derive from the chunk's stacked scan
+            # outputs + static plan bytes: zero additional host syncs
+            summary = obs_records.round_summary(
+                stats={k: ys_h[k][r] for k in
+                       ("rewards", "lam_mean", "lam_disagreement",
+                        "param_drift", "kl", "per_client_lam",
+                        "rewards_per_client")},
+                comm_bytes=self.ledger.total,
+                up_bytes=self.ledger.up_bytes,
+                down_bytes=self.ledger.down_bytes,
+                participants=parts,
+                dispatches=per_round_dispatches,
+                up_nbytes=[up_static] * p,
+                down_nbytes=down_static,
+                local_steps=[cfc.local_steps] * p,
+                cohorts=1,
+                fused=rounds,
+            )
             out.append(summary)
             self.history.append(summary)
+            self.obs.emit_round(summary, round=round0 + r)
         return out
 
     # ------------------------------------------------- per-client loop path

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, List, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 
 class SimClock:
@@ -39,18 +39,31 @@ class Event:
 
 
 class EventQueue:
-    """Min-heap of Events with a deterministic (time, seq) total order."""
+    """Min-heap of Events with a deterministic (time, seq) total order.
 
-    def __init__(self) -> None:
+    ``tap``, when given, observes every mutation as ``tap(op, time,
+    depth)`` with op in {"push", "pop"}, the event's scheduled time, and
+    the post-mutation queue depth — a pure read-out (it cannot reorder
+    or reject events) that the obs trace renders as an in-flight counter
+    track.
+    """
+
+    def __init__(self, tap: Optional[Callable[[str, float, int], None]]
+                 = None) -> None:
         self._heap: List[Tuple[float, int, Any]] = []
         self._seq = 0
+        self._tap = tap
 
     def push(self, time: float, item: Any) -> None:
         heapq.heappush(self._heap, (float(time), self._seq, item))
         self._seq += 1
+        if self._tap is not None:
+            self._tap("push", float(time), len(self._heap))
 
     def pop(self) -> Event:
         time, seq, item = heapq.heappop(self._heap)
+        if self._tap is not None:
+            self._tap("pop", time, len(self._heap))
         return Event(time, seq, item)
 
     def peek_time(self) -> float:

@@ -47,18 +47,21 @@ from repro.core import comms, fedavg, firm
 from repro.fed.sched.clock import EventQueue, SimClock
 from repro.fed.sched.cohort import build_cohorts
 from repro.fed.sched.profiles import sample_profiles
+from repro.obs import records as obs_records
+from repro.obs.trace import TraceBuilder
 
 
 def client_round_seconds(profile, down_nbytes: float, up_nbytes: float,
                          local_steps: int, batch_size: int,
                          seq_len: int) -> float:
-    """download + local compute + upload, from bytes/tokens and rates."""
-    toks = comms.local_phase_tokens(local_steps, batch_size, seq_len)
-    return (comms.transmission_seconds(down_nbytes,
-                                       profile.down_bytes_per_sec)
-            + comms.compute_seconds(toks, profile.tokens_per_sec)
-            + comms.transmission_seconds(up_nbytes,
-                                         profile.up_bytes_per_sec))
+    """download + local compute + upload, from bytes/tokens and rates.
+
+    The sum of ``core.comms.client_round_segments`` — one definition for
+    the policies' timing and the trace emitter's spans, so per-client
+    spans always add up to the reported round time."""
+    return sum(d for _, d in comms.client_round_segments(
+        profile, down_nbytes, up_nbytes, local_steps, batch_size,
+        seq_len))
 
 
 class SyncPolicy:
@@ -82,21 +85,35 @@ class SyncPolicy:
         if tr.ec.fused_rounds > 1 and tr._fused_mode()[0]:
             start = len(tr.history)
             tr.run(rounds)
-            return [self._annotate(st, s) for s in tr.history[start:]]
+            return [self._annotate(st, s, round_idx=start + i)
+                    for i, s in enumerate(tr.history[start:])]
         return [self.step(st) for _ in range(rounds)]
 
     def step(self, st: "ScheduledTrainer") -> dict:
-        return self._annotate(st, st.trainer.run_round())
+        s = st.trainer.run_round()
+        return self._annotate(st, s,
+                              round_idx=len(st.trainer.history) - 1)
 
-    def _annotate(self, st: "ScheduledTrainer", s: dict) -> dict:
-        durs = [st.client_seconds(c, s["down_nbytes"], s["up_nbytes"][i],
-                                  s["local_steps"][i])
+    def _annotate(self, st: "ScheduledTrainer", s: dict,
+                  round_idx: Optional[int] = None) -> dict:
+        t0 = st.clock.now
+        segs = [st.client_segments(c, s["down_nbytes"], s["up_nbytes"][i],
+                                   s["local_steps"][i])
                 for i, c in enumerate(s["participants"])]
+        durs = [sum(d for _, d in seg) for seg in segs]
         dur = max(durs)
+        for c, seg in zip(s["participants"], segs):
+            st.trace.client_span(c, t0, seg, round_idx=round_idx)
+        st.trace.server_span("round", t0, dur,
+                             {"policy": self.name, "round": round_idx,
+                              "participants": len(durs)})
         st.clock.advance_by(dur)
-        s.update(policy=self.name, sim_time=st.clock.now,
-                 round_duration=dur, dropped=[],
-                 client_seconds=[round(d, 6) for d in durs])
+        st.trace.instant("aggregate", st.clock.now,
+                         args={"round": round_idx})
+        obs_records.annotate_schedule(
+            s, policy=self.name, sim_time=st.clock.now,
+            round_duration=dur, dropped=[], client_seconds=durs)
+        st.obs.emit_schedule(s, round=round_idx)
         return s
 
 
@@ -137,7 +154,9 @@ class DeadlinePolicy:
             survivors = [min(selected, key=lambda c: pred[c])]
         dropped = [c for c in selected if c not in survivors]
 
+        t0 = st.clock.now
         s = tr.run_round(participants=survivors)
+        round_idx = len(tr.history) - 1
         if dropped:
             # dropped clients were still dispatched and received the
             # broadcast before missing the deadline — their downlink
@@ -145,17 +164,37 @@ class DeadlinePolicy:
             tr.ledger.down_bytes += len(dropped) * s["down_nbytes"]
             s["down_bytes"] = tr.ledger.down_bytes
             s["comm_bytes"] = tr.ledger.total
-        durs = [st.client_seconds(c, s["down_nbytes"], s["up_nbytes"][i],
-                                  s["local_steps"][i])
+        segs = [st.client_segments(c, s["down_nbytes"], s["up_nbytes"][i],
+                                   s["local_steps"][i])
                 for i, c in enumerate(survivors)]
+        durs = [sum(d for _, d in seg) for seg in segs]
         # the server holds the barrier open until the deadline whenever
         # anyone was dropped (it cannot know they won't make it)
         dur = max(durs) if not dropped else max(max(durs), deadline)
+        for c, seg in zip(survivors, segs):
+            st.trace.client_span(c, t0, seg, round_idx=round_idx)
+        for c in dropped:
+            # spans from the scheduler's own prediction (analytic bytes):
+            # the work was dispatched, the upload never landed
+            st.trace.client_span(
+                c, t0,
+                st.client_segments(c, down_pred, up_pred,
+                                   tr._client_fcs[c].local_steps),
+                round_idx=round_idx, extra={"dropped": True})
+            st.trace.instant("deadline missed", t0 + deadline, client=c,
+                             args={"predicted_seconds": round(pred[c], 6)})
+        st.trace.server_span("round (deadline)", t0, dur,
+                             {"policy": self.name, "round": round_idx,
+                              "deadline": deadline,
+                              "dropped": len(dropped)})
         st.clock.advance_by(dur)
-        s.update(policy=self.name, sim_time=st.clock.now,
-                 round_duration=dur, dropped=dropped, selected=selected,
-                 deadline=deadline, client_seconds=[round(x, 6)
-                                                    for x in durs])
+        st.trace.instant("aggregate", st.clock.now,
+                         args={"round": round_idx})
+        obs_records.annotate_schedule(
+            s, policy=self.name, sim_time=st.clock.now,
+            round_duration=dur, dropped=dropped, client_seconds=durs,
+            selected=selected, deadline=deadline)
+        st.obs.emit_schedule(s, round=round_idx)
         return s
 
 
@@ -167,6 +206,7 @@ class _Arrival:
     decoded: jnp.ndarray             # (d,) delta as the server decodes it
     rewards: jnp.ndarray             # (M,) client mean rewards this phase
     up_nbytes: int
+    flow_id: int = 0                 # trace flow arrow: upload -> aggregate
 
 
 class FedBuffPolicy:
@@ -193,7 +233,15 @@ class FedBuffPolicy:
         buf_size = sc.buffer_size or n
         if not 1 <= buf_size <= n:
             raise ValueError(f"buffer_size {buf_size} outside [1, {n}]")
-        queue = EventQueue()
+
+        def tap(op, t, depth):
+            # queue depth = uploads in flight; sampled at dispatch time
+            # for pushes, at the arrival's own time for pops
+            st.trace.counter("uploads in flight",
+                             st.clock.now if op == "push" else t,
+                             {"in_flight": depth})
+
+        queue = EventQueue(tap=tap)
         version = 0
         last_staleness: Dict[int, int] = {c: 0 for c in range(n)}
         self._dispatch(st, list(range(n)), version, last_staleness, queue)
@@ -218,20 +266,30 @@ class FedBuffPolicy:
             w = np.asarray(fedavg.staleness_weights(staleness,
                                                     sc.staleness_pow))
             rewards_pc = np.asarray(jnp.stack([a.rewards for a in buffer]))
-            summary = {
-                "policy": self.name,
-                "version": version,
-                "sim_time": st.clock.now,
-                "round_duration": st.clock.now - last_agg,
-                "participants": [a.client for a in buffer],
-                "staleness": staleness,
-                "staleness_weights": [float(x) for x in w],
-                "rewards": rewards_pc.mean(0),
-                "rewards_per_client": rewards_pc,
-                "comm_bytes": tr.ledger.total,
-                "up_bytes": tr.ledger.up_bytes,
-                "down_bytes": tr.ledger.down_bytes,
-            }
+            summary = obs_records.fedbuff_summary(
+                version=version,
+                sim_time=st.clock.now,
+                round_duration=st.clock.now - last_agg,
+                participants=[a.client for a in buffer],
+                staleness=staleness,
+                staleness_weights=w,
+                rewards=rewards_pc.mean(0),
+                rewards_per_client=rewards_pc,
+                comm_bytes=tr.ledger.total,
+                up_bytes=tr.ledger.up_bytes,
+                down_bytes=tr.ledger.down_bytes,
+            )
+            st.trace.server_span(f"buffer v{version}", last_agg,
+                                 st.clock.now - last_agg,
+                                 {"policy": self.name,
+                                  "arrivals": len(buffer)})
+            st.trace.instant(f"aggregate v{version}", st.clock.now,
+                             args={"staleness": staleness})
+            for a, s_c in zip(buffer, staleness):
+                st.trace.flow_end("upload", st.clock.now, a.flow_id,
+                                  args={"client": a.client,
+                                        "staleness": s_c})
+            st.obs.emit_round(summary, round=version - 1)
             last_agg = st.clock.now
             idle = [a.client for a in buffer]
             buffer = []
@@ -287,11 +345,16 @@ class FedBuffPolicy:
                         flats[i], tr._delta_spec, tr._uplink_state[c],
                         key=tr._next_key())
                 tr.ledger.send_up(payload)
-                dur = st.client_seconds(c, down_nbytes, payload.nbytes,
-                                        co.cfc.local_steps)
+                segs = st.client_segments(c, down_nbytes, payload.nbytes,
+                                          co.cfc.local_steps)
+                dur = sum(d for _, d in segs)
+                t_end = st.trace.client_span(c, st.clock.now, segs,
+                                             extra={"version": version})
+                fid = st.trace.flow_start("upload", t_end, client=c,
+                                          args={"version": version})
                 queue.push(st.clock.now + dur,
                            _Arrival(c, version, dec, res.rewards_pc[i],
-                                    int(payload.nbytes)))
+                                    int(payload.nbytes), fid))
 
 
 _POLICIES = {"sync": SyncPolicy, "deadline": DeadlinePolicy,
@@ -328,6 +391,11 @@ class ScheduledTrainer:
         self.clock = SimClock()
         self.policy = make_policy(self.sc.policy)
         self.history: List[dict] = []
+        # telemetry: round records ride the engine's pipeline; the
+        # policies additionally feed the simulated-time trace (client
+        # phase spans, aggregation instants, drop/staleness annotations)
+        self.obs = trainer.obs
+        self.trace = TraceBuilder()
         # a legacy-constructed trainer planned itself without this
         # SchedConfig; re-resolve so trainer.plan reflects the policy it
         # will actually run under (e.g. deadline/fedbuff force per-round
@@ -351,7 +419,25 @@ class ScheduledTrainer:
                                     up_nbytes, local_steps,
                                     self.trainer.fc.batch_size, seq)
 
+    def client_segments(self, c: int, down_nbytes: float,
+                        up_nbytes: float, local_steps: int):
+        """(phase, seconds) decomposition of ``client_seconds`` — what
+        the trace emitter renders as consecutive spans."""
+        seq = self.trainer.ec.prompt_len + self.trainer.ec.max_new
+        return comms.client_round_segments(self.profiles[c], down_nbytes,
+                                           up_nbytes, local_steps,
+                                           self.trainer.fc.batch_size, seq)
+
     def run(self, rounds: Optional[int] = None) -> List[dict]:
         out = self.policy.run(self, rounds or self.trainer.fc.rounds)
         self.history.extend(out)
         return self.history
+
+    def export_trace(self, path: str, host_spans=None) -> dict:
+        """Write the accumulated schedule as Chrome/Perfetto trace-event
+        JSON (open at https://ui.perfetto.dev).  ``host_spans`` optionally
+        adds ``repro.obs.jitwatch`` spans as a host wall-clock process.
+        Validates before writing; returns the trace dict."""
+        if host_spans:
+            self.trace.add_host_spans(host_spans)
+        return self.trace.write(path)

@@ -1,0 +1,172 @@
+"""Plan auditor: reconcile ExecutionPlan predictions with observed runs.
+
+``repro.fed.api.plan()`` predicts, before anything compiles, how a run
+will execute: the chosen executor, jit dispatches per round, and exact
+wire bytes per round (from the codecs' ``nbytes_static``).  This module
+closes the loop — ``audit_run`` executes a trainer while counting what
+ACTUALLY happens (engine dispatch counter, comms ledger, jit-cache
+compile events via ``repro.obs.jitwatch``) and fails loudly when
+prediction and observation drift:
+
+    report = audit_run(trainer, rounds=4)
+    report.raise_on_drift()          # PlanDriftError lists mismatches
+
+Checks and their enforcement:
+
+  dispatches_per_round   plan.dispatches_per_round vs the engine counter
+                         delta / rounds — enforced under the sync policy
+                         (the planner models the bare engine round)
+  up/down_bytes_per_round  plan bytes vs ledger delta / rounds — enforced
+                         under sync; deadline (dropped-client downlinks)
+                         and fedbuff (version-skewed redispatch) schedules
+                         are reported but not enforced
+  recompiles_after_warmup  0 vs jit-cache growth during the audited run —
+                         enforced whenever the auditor warmed up first
+  host_transfers_per_round  observed only (the engine's one-per-round /
+                         one-per-chunk discipline; pinned by tests, no
+                         plan-side prediction)
+
+CI runs a fast-lane smoke audit (``benchmarks/bench_report.py --smoke``)
+over firm x {identity, int8+ef} x {per-round, fused} so a silent
+regression in either the planner's model or the engine's accounting
+fails the job.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.obs import jitwatch
+
+
+class PlanDriftError(RuntimeError):
+    """Predicted-vs-observed mismatch an audit was asked to enforce."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditCheck:
+    name: str
+    predicted: Optional[float]
+    observed: float
+    enforced: bool
+
+    @property
+    def ok(self) -> bool:
+        if self.predicted is None or not self.enforced:
+            return True
+        return abs(self.predicted - self.observed) <= 1e-6
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "predicted": self.predicted,
+                "observed": self.observed, "enforced": self.enforced,
+                "ok": self.ok}
+
+
+@dataclasses.dataclass
+class AuditReport:
+    algorithm: str
+    executor: str
+    policy: str
+    uplink_codec: str
+    downlink_codec: str
+    rounds: int
+    checks: List[AuditCheck]
+    jit_calls: int
+    compiles_by_name: dict
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    def raise_on_drift(self) -> "AuditReport":
+        bad = [c for c in self.checks if not c.ok]
+        if bad:
+            lines = [f"  {c.name}: predicted={c.predicted} "
+                     f"observed={c.observed}" for c in bad]
+            raise PlanDriftError(
+                f"plan drift on {self.algorithm}/{self.executor}"
+                f"/{self.uplink_codec} ({self.policy} policy):\n"
+                + "\n".join(lines))
+        return self
+
+    def to_json(self) -> dict:
+        return {
+            "algorithm": self.algorithm,
+            "executor": self.executor,
+            "policy": self.policy,
+            "uplink_codec": self.uplink_codec,
+            "downlink_codec": self.downlink_codec,
+            "rounds": self.rounds,
+            "ok": self.ok,
+            "checks": [c.to_json() for c in self.checks],
+            "jit_calls": self.jit_calls,
+            "compiles_by_name": dict(self.compiles_by_name),
+        }
+
+
+def _base_trainer(trainer):
+    """Unwrap a ScheduledTrainer to the engine trainer that owns the
+    counters, ledger and plan."""
+    return getattr(trainer, "trainer", trainer)
+
+
+def audit_run(trainer, rounds: Optional[int] = None, *,
+              warmup: bool = True) -> AuditReport:
+    """Run ``rounds`` through ``trainer`` and reconcile against its plan.
+
+    ``trainer`` is a ``FederatedTrainer`` or a ``ScheduledTrainer``; the
+    audited counters always live on the underlying engine trainer.  With
+    ``warmup`` (default) one round — one full chunk on the fused
+    executor — runs first so the audited window measures steady state
+    and the recompile check is meaningful.
+    """
+    base = _base_trainer(trainer)
+    plan = base.plan
+    chunk = plan.fused_chunks[0] if plan.executor == "fused" else 1
+    if rounds is None:
+        rounds = 2 * chunk
+    if plan.executor == "fused" and rounds % chunk:
+        raise ValueError(
+            f"audit rounds ({rounds}) must be a multiple of the fused "
+            f"chunk ({chunk}) so per-round dispatch counts are exact")
+
+    if warmup:
+        trainer.run(chunk)
+
+    d0 = base.jit_dispatches
+    h0 = base.host_transfers
+    up0, down0 = base.ledger.up_bytes, base.ledger.down_bytes
+    n0 = len(base.history) if plan.policy == "sync" else None
+
+    with jitwatch.record() as log:
+        trainer.run(rounds)
+
+    # fedbuff counts aggregations, not engine rounds; normalize by what
+    # the engine actually appended when it ran engine rounds
+    ran = (len(base.history) - n0) if n0 is not None else rounds
+    ran = max(ran, 1)
+    strict = plan.policy == "sync"
+    checks = [
+        AuditCheck("dispatches_per_round", plan.dispatches_per_round,
+                   (base.jit_dispatches - d0) / ran, strict),
+        AuditCheck("up_bytes_per_round", float(plan.up_bytes_per_round),
+                   (base.ledger.up_bytes - up0) / ran, strict),
+        AuditCheck("down_bytes_per_round",
+                   float(plan.down_bytes_per_round),
+                   (base.ledger.down_bytes - down0) / ran, strict),
+        AuditCheck("recompiles_after_warmup", 0.0 if warmup else None,
+                   float(log.compile_count), warmup),
+        AuditCheck("host_transfers_per_round", None,
+                   (base.host_transfers - h0) / ran, False),
+    ]
+    return AuditReport(
+        algorithm=plan.algorithm,
+        executor=plan.executor,
+        policy=plan.policy,
+        uplink_codec=plan.spec.engine.uplink_codec,
+        downlink_codec=plan.spec.engine.downlink_codec,
+        rounds=rounds,
+        checks=checks,
+        jit_calls=log.call_count,
+        compiles_by_name=log.compiles_by_name(),
+    )

@@ -1,0 +1,79 @@
+"""One-switch debug toggles for NaN-hunting a divergent federated run.
+
+Editing source to flip ``jax_debug_nans`` / ``jax_enable_x64`` is the
+old workflow; these helpers put both behind environment variables (read
+once at ``repro.obs`` import) and CLI flags (``benchmarks/run.py
+--debug-nans / --x64``):
+
+    REPRO_DEBUG_NANS=1 PYTHONPATH=src python -m benchmarks.run --only ...
+    PYTHONPATH=src python -m benchmarks.run --debug-nans --only ...
+
+``jax_debug_nans`` makes every jitted program re-run un-jitted on a NaN
+and raise at the first producing primitive; ``jax_enable_x64`` promotes
+default float precision to 64-bit to separate true divergence from f32
+accumulation noise.  Both are global jax config switches — flip them at
+process start, not mid-run (compiled programs keep the settings they
+were traced under).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Mapping, Optional
+
+import jax
+
+ENV_DEBUG_NANS = "REPRO_DEBUG_NANS"
+ENV_X64 = "REPRO_X64"
+
+_TRUTHY = {"1", "true", "yes", "on"}
+_FALSY = {"0", "false", "no", "off", ""}
+
+
+def _parse(value: str, name: str) -> bool:
+    v = value.strip().lower()
+    if v in _TRUTHY:
+        return True
+    if v in _FALSY:
+        return False
+    raise ValueError(f"{name}={value!r}: expected a boolean "
+                     f"({sorted(_TRUTHY)} / {sorted(_FALSY)})")
+
+
+def set_debug_nan(flag: bool) -> None:
+    """Raise at the first NaN-producing primitive in any jitted program."""
+    jax.config.update("jax_debug_nans", bool(flag))
+
+
+def set_x64(flag: bool) -> None:
+    """Default arrays to 64-bit floats (separate divergence from f32
+    accumulation noise)."""
+    jax.config.update("jax_enable_x64", bool(flag))
+
+
+_applied: Optional[Dict[str, bool]] = None
+
+
+def configure_from_env(env: Optional[Mapping[str, str]] = None, *,
+                       force: bool = False) -> Dict[str, bool]:
+    """Apply REPRO_DEBUG_NANS / REPRO_X64 if set; returns what changed.
+
+    Runs once per process (``repro.obs`` import calls it); ``force``
+    re-reads — tests use an explicit ``env`` mapping with ``force=True``.
+    """
+    global _applied
+    if _applied is not None and not force:
+        return dict(_applied)
+    env = os.environ if env is None else env
+    applied: Dict[str, bool] = {}
+    v = env.get(ENV_DEBUG_NANS)
+    if v is not None:
+        flag = _parse(v, ENV_DEBUG_NANS)
+        set_debug_nan(flag)
+        applied["jax_debug_nans"] = flag
+    v = env.get(ENV_X64)
+    if v is not None:
+        flag = _parse(v, ENV_X64)
+        set_x64(flag)
+        applied["jax_enable_x64"] = flag
+    _applied = applied
+    return dict(applied)

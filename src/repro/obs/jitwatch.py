@@ -1,0 +1,104 @@
+"""Lightweight jit-entry instrumentation: dispatches, compiles, wall time.
+
+The engine wraps every jitted program it owns with ``wrap(name, fn)``.
+When no recorder is active the wrapper is a single global check on top
+of the underlying call — the hot path stays uninstrumented.  Inside a
+``record()`` context each call logs a ``JitSpan`` (program name, entry
+wall-clock, duration, and whether THIS call triggered a compilation —
+detected via the jit cache-size delta, which jax exposes as
+``fn._cache_size``).
+
+Two consumers:
+
+  * the plan auditor (``repro.obs.audit``) counts compiles and calls per
+    run and reconciles them with the ExecutionPlan;
+  * ``TraceBuilder.add_host_spans`` renders the spans on the host
+    wall-clock process of a Perfetto trace, so compile vs execute cost
+    is visible per program.
+
+``record()`` nests: every active recorder sees every span, so an audit
+can run inside a trace capture without either stealing the other's
+events.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import time
+from collections import Counter
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class JitSpan:
+    name: str
+    t0: float                 # perf_counter seconds at call entry
+    dur: float                # seconds spent in the call (dispatch time)
+    compiled: bool            # did this call grow the jit cache?
+
+
+class JitLog:
+    """Spans collected by one ``record()`` context."""
+
+    def __init__(self) -> None:
+        self.spans: List[JitSpan] = []
+
+    @property
+    def call_count(self) -> int:
+        return len(self.spans)
+
+    @property
+    def compile_count(self) -> int:
+        return sum(1 for s in self.spans if s.compiled)
+
+    def calls_by_name(self) -> Dict[str, int]:
+        return dict(Counter(s.name for s in self.spans))
+
+    def compiles_by_name(self) -> Dict[str, int]:
+        return dict(Counter(s.name for s in self.spans if s.compiled))
+
+
+_STACK: List[JitLog] = []
+
+
+@contextlib.contextmanager
+def record(log: Optional[JitLog] = None):
+    """Activate span recording for the dynamic extent of the block."""
+    log = JitLog() if log is None else log
+    _STACK.append(log)
+    try:
+        yield log
+    finally:
+        _STACK.remove(log)
+
+
+def active() -> bool:
+    return bool(_STACK)
+
+
+def wrap(name: str, fn):
+    """Wrap a jitted callable; spans flow to every active recorder.
+
+    The wrapper preserves the underlying function's call semantics
+    (donation, static args) — jax sees its own arguments either way.
+    """
+    get_size = getattr(fn, "_cache_size", None)
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        if not _STACK:
+            return fn(*args, **kwargs)
+        before = get_size() if get_size is not None else -1
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        dur = time.perf_counter() - t0
+        compiled = (get_size() > before) if get_size is not None else False
+        span = JitSpan(name, t0, dur, compiled)
+        for log in _STACK:
+            log.spans.append(span)
+        return out
+
+    wrapped._jitwatch_name = name
+    wrapped._wrapped_jit = fn
+    return wrapped
